@@ -1,0 +1,45 @@
+"""§Perf helper: compare dry-run variants for one (arch, shape, mesh) pair.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.perf olmo-1b train_4k 16x16
+prints per-variant roofline terms and deltas vs baseline from
+results/dryrun/*.json.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+
+def compare(arch, shape, mesh, outdir="results/dryrun"):
+    paths = glob.glob(os.path.join(outdir, f"{arch}_{shape}_{mesh}_*.json"))
+    recs = {}
+    for p in sorted(paths):
+        with open(p) as f:
+            r = json.load(f)
+        if r["status"] == "OK":
+            recs[r["variant"]] = r
+    if "baseline" not in recs:
+        raise SystemExit(f"no baseline record for {arch} {shape} {mesh}")
+    base = recs["baseline"]["roofline"]
+    base_mem = recs["baseline"]["memory"]["per_device_total"]
+    rows = []
+    hdr = (f"{'variant':12s} {'compute_s':>10s} {'memory_s':>10s} "
+           f"{'collect_s':>10s} {'dominant':>12s} {'mem_GB':>8s} "
+           f"{'Δdom%':>7s}")
+    rows.append(hdr)
+    dom_key = base["dominant"]
+    for v, r in sorted(recs.items(), key=lambda kv: kv[0] != "baseline"):
+        ro = r["roofline"]
+        mem = r["memory"]["per_device_total"] / 1e9
+        delta = (ro[dom_key] - base[dom_key]) / max(base[dom_key], 1e-12) * 100
+        rows.append(f"{v:12s} {ro['compute_s']:10.3f} {ro['memory_s']:10.3f} "
+                    f"{ro['collective_s']:10.3f} {ro['dominant']:>12s} "
+                    f"{mem:8.1f} {delta:+6.1f}%")
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    print(compare(*sys.argv[1:4]))

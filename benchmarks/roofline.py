@@ -1,0 +1,71 @@
+"""Roofline table renderer: reads results/dryrun/*.json into (a) CSV lines
+for benchmarks.run and (b) the markdown table for EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load(outdir="results/dryrun", variant=None):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(outdir, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if variant and r.get("variant") != variant:
+            continue
+        recs.append(r)
+    return recs
+
+
+def summary_csv(outdir="results/dryrun"):
+    recs = load(outdir)
+    if not recs:
+        raise FileNotFoundError(f"no dry-run records in {outdir}")
+    lines = []
+    for r in recs:
+        tag = f"roofline.{r['arch']}.{r['shape']}.{r['mesh']}.{r.get('variant','baseline')}"
+        if r["status"] != "OK":
+            lines.append(f"{tag},0,\"{r['status']}: "
+                         f"{r.get('reason', r.get('error', ''))[:80]}\"")
+            continue
+        ro = r["roofline"]
+        d = {"compute_s": round(ro["compute_s"], 4),
+             "memory_s": round(ro["memory_s"], 4),
+             "collective_s": round(ro["collective_s"], 4),
+             "dominant": ro["dominant"],
+             "useful_flops_ratio": (round(ro["useful_flops_ratio"], 3)
+                                    if ro.get("useful_flops_ratio") else None),
+             "fits_16gb": r["memory"]["fits_16gb"]}
+        lines.append(f"{tag},{r.get('compile_s', 0) * 1e6:.0f},"
+                     f"\"{json.dumps(d)}\"")
+    return lines
+
+
+def markdown_table(outdir="results/dryrun", variant="baseline"):
+    recs = [r for r in load(outdir, variant)]
+    hdr = ("| arch | shape | mesh | status | compute (s) | memory (s) | "
+           "collective (s) | dominant | useful-FLOPs | per-dev GB | fits 16GB |")
+    sep = "|" + "---|" * 11
+    rows = [hdr, sep]
+    for r in recs:
+        if r["status"] != "OK":
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                        f"{r['status']} | - | - | - | - | - | - | - |")
+            continue
+        ro = r["roofline"]
+        mem_gb = r["memory"]["per_device_total"] / 1e9
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | OK "
+            f"| {ro['compute_s']:.3f} | {ro['memory_s']:.3f} "
+            f"| {ro['collective_s']:.3f} | {ro['dominant'].replace('_s','')} "
+            f"| {ro['useful_flops_ratio']:.2f} "
+            f"| {mem_gb:.1f} | {'✅' if r['memory']['fits_16gb'] else '⚠️'} |")
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    import sys
+    out = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
+    print(markdown_table(out))

@@ -1,0 +1,53 @@
+"""Benchmark runner — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Each benchmark is a CPU-scale
+instance of the corresponding paper experiment (see benchmarks/figures.py);
+``roofline`` summarises the TPU dry-run artifacts when present.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+from benchmarks import figures
+
+BENCHES = [
+    ("fig1_single_global_merging", figures.fig1_single_global_merging),
+    ("fig2ab_window_allocation", figures.fig2ab_window_allocation),
+    ("fig2c_counterfactual_mergeability",
+     figures.fig2c_counterfactual_mergeability),
+    ("table1_convergence_rates", figures.table1_convergence_rates),
+    ("corollary_d2_consensus_bound", figures.consensus_bound_corollary_d2),
+    ("appendix_c34_gossip_merge", figures.appendix_c34_gossip_merge),
+    ("beyond_adaptive_schedule", figures.beyond_adaptive_schedule),
+    ("beyond_bf16_gossip", figures.beyond_bf16_gossip),
+    ("kernels_microbench", figures.kernels_microbench),
+]
+
+
+def main() -> None:
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in BENCHES:
+        if only and only not in name:
+            continue
+        try:
+            us, derived = fn()
+            print(f"{name},{us:.0f},\"{json.dumps(derived)}\"", flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name},-1,\"ERROR: {type(e).__name__}: {e}\"", flush=True)
+    # roofline summary (non-fatal when dry-run artifacts are absent)
+    try:
+        from benchmarks.roofline import summary_csv
+        for line in summary_csv("results/dryrun"):
+            print(line, flush=True)
+    except Exception as e:  # noqa: BLE001
+        print(f"roofline,-1,\"(no dry-run artifacts: {e})\"", flush=True)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

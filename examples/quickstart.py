@@ -1,0 +1,35 @@
+"""Quickstart: the paper's effect in ~60 seconds on CPU.
+
+Trains 8 decentralized agents on a non-IID (Dirichlet alpha=0.1) synthetic
+classification task with sparse random gossip (R=0.2), then applies ONE
+global merging — and prints the local vs merged global test accuracy, plus
+the no-communication ablation showing merging only works with (limited but)
+nonzero communication.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+from benchmarks.common import run_schedule  # noqa: E402
+
+
+def main():
+    print("== decentralized SGD, 8 agents, Dirichlet(0.1), R=0.2 gossip ==")
+    out = run_schedule("constant", rounds=80, seed=0)
+    print(f"  local models (avg global acc) : {out['local']:.3f}")
+    print(f"  after ONE global merging      : {out['merged']:.3f}")
+    print(f"  merge gain                    : {out['merged']-out['local']:+.3f}")
+    print(f"  communication spent           : {out['comm_P']:.1f} x model size")
+
+    print("== ablation: zero communication ==")
+    out0 = run_schedule("local", rounds=80, seed=0)
+    print(f"  local models                  : {out0['local']:.3f}")
+    print(f"  merged model                  : {out0['merged']:.3f}  "
+          "(no mergeability without communication)")
+
+
+if __name__ == "__main__":
+    main()

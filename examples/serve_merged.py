@@ -1,0 +1,30 @@
+"""Serve the merged model produced by decentralized training.
+
+Restores the single-model artifact written by train_decentralized.py
+(``--save-merged``) and runs batched prefill + decode through the serving
+engine.
+
+Run:  PYTHONPATH=src python examples/serve_merged.py [--restore path]
+"""
+import os
+import pathlib
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def main():
+    cmd = [sys.executable, "-m", "repro.launch.serve", "--arch", "olmo-1b",
+           "--preset", "cpu", "--batch", "4", "--prompt-len", "32",
+           "--max-new", "16"]
+    ckpt = ROOT / "results/merged_olmo.msgpack"
+    if ckpt.exists() and "--restore" not in sys.argv:
+        cmd += ["--restore", str(ckpt)]
+    cmd += sys.argv[1:]
+    env = {**os.environ, "PYTHONPATH": str(ROOT / "src")}
+    raise SystemExit(subprocess.call(cmd, cwd=ROOT, env=env))
+
+
+if __name__ == "__main__":
+    main()

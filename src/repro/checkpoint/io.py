@@ -1,0 +1,52 @@
+"""Minimal checkpointing: pytrees -> msgpack (+ raw array payloads).
+
+No external deps beyond msgpack (installed). Arrays are stored as
+(dtype, shape, bytes) triples keyed by their flattened key path; restore
+rebuilds into the structure of a reference pytree.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import msgpack
+import numpy as np
+
+
+def _key_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def save(path: str, tree) -> None:
+    flat = {}
+    for kp, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        arr = np.asarray(leaf)
+        flat[_key_str(kp)] = {
+            "dtype": arr.dtype.str, "shape": list(arr.shape),
+            "data": arr.tobytes()}
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(path, "wb") as f:
+        f.write(msgpack.packb(flat))
+
+
+def restore(path: str, like):
+    with open(path, "rb") as f:
+        flat = msgpack.unpackb(f.read())
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for kp, ref in paths:
+        key = _key_str(kp)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing {key}")
+        rec = flat[key]
+        arr = np.frombuffer(rec["data"], dtype=np.dtype(rec["dtype"]))
+        leaves.append(arr.reshape(rec["shape"]))
+    return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,6 @@
+"""The paper's contribution: temporal communication allocation + single
+global merging for decentralized learning, as a composable JAX layer."""
+from repro.core import consensus, gossip, merge, schedule, topology  # noqa: F401
+from repro.core.dsgd import (init_parallel_state, init_state,  # noqa: F401
+                             make_dsgd_round, make_dsgd_step,
+                             make_parallel_step)

@@ -1,0 +1,79 @@
+"""Consensus-distance and mergeability diagnostics (paper §5 quantities).
+
+* Xi_t        — consensus distance sqrt( (1/m) sum_k ||theta_k - bar||^2 )
+                (= sqrt Tr Gamma^(t)).
+* u_term      — Monte-Carlo estimate of the progressive-sharpening term
+                grad L(bar)^T grad Tr( H(bar) Gamma )  (Theorem 1's U^(t)
+                leading part) via nested JVPs; negative under Assumption 4.
+* mergeability_gap — counterfactual merged-model metric minus mean local
+                metric (Def. 2 operationalised).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gossip import merged_model
+
+
+def consensus_distance(params_stacked) -> jnp.ndarray:
+    """Xi_t over an agent-stacked pytree (leaves (m, ...))."""
+    total = 0.0
+    m = None
+    for x in jax.tree.leaves(params_stacked):
+        m = x.shape[0]
+        mean = jnp.mean(x.astype(jnp.float32), axis=0, keepdims=True)
+        total = total + jnp.sum(jnp.square(x.astype(jnp.float32) - mean))
+    return jnp.sqrt(total / m)
+
+
+def gamma_trace(params_stacked) -> jnp.ndarray:
+    return jnp.square(consensus_distance(params_stacked))
+
+
+def _tree_dot(a, b):
+    return sum(jnp.vdot(x.astype(jnp.float32), y.astype(jnp.float32))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def u_term(loss_fn, params_stacked, batch) -> jnp.ndarray:
+    """Estimate grad L(bar)^T grad Tr( H(bar) Gamma^(t) ).
+
+    Tr(H Gamma) = (1/m) sum_k d_k^T H d_k with d_k = theta_k - bar. The
+    directional derivative of s(theta)=Tr(H(theta) Gamma) along grad L is
+    computed with one more JVP. Cubic AD nesting — use on CPU-scale models
+    (benchmarks) only.
+    """
+    bar = merged_model(params_stacked)
+    m = jax.tree.leaves(params_stacked)[0].shape[0]
+    deltas = jax.tree.map(
+        lambda x, b: jax.lax.stop_gradient(x.astype(jnp.float32) - b[None]),
+        params_stacked, bar)
+
+    def scalar_loss(p):
+        out = loss_fn(p, batch)
+        return out[0] if isinstance(out, tuple) else out
+
+    grad_fn = jax.grad(scalar_loss)
+
+    def sharpness(p):
+        # (1/m) sum_k d_k^T H(p) d_k  via JVP of grad
+        def one(k):
+            d_k = jax.tree.map(lambda d: d[k], deltas)
+            _, hvp = jax.jvp(grad_fn, (p,), (d_k,))
+            return _tree_dot(hvp, d_k)
+        return sum(one(k) for k in range(m)) / m
+
+    g = grad_fn(bar)
+    _, dir_deriv = jax.jvp(sharpness, (bar,), (g,))
+    return dir_deriv
+
+
+def mergeability_gap(eval_fn, params_stacked):
+    """(metric(merged), mean_k metric(theta_k), gap). ``eval_fn`` maps a
+    single (non-stacked) param tree to a scalar metric (e.g. accuracy)."""
+    merged = merged_model(params_stacked)
+    merged_metric = eval_fn(merged)
+    local = jax.vmap(eval_fn)(params_stacked)
+    mean_local = jnp.mean(local)
+    return merged_metric, mean_local, merged_metric - mean_local

@@ -1,0 +1,150 @@
+"""Decentralized training engine (Algorithm 1 of the paper).
+
+State is agent-stacked: every leaf of params/opt_state carries a leading
+(m,) agent axis (sharded over ('pod','agent') on the production mesh).
+One round = per-agent local step(s) (vmapped grad + optimizer; zero
+cross-agent traffic) followed by gossip mixing with the scheduler's W^(t).
+
+``loss_fn(params, batch, rng) -> (loss, aux)`` is any per-agent objective
+(an LM from repro.models, or the benchmark classifiers).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gossip
+from repro.core.consensus import consensus_distance
+from repro.optim.optim import Optimizer
+
+
+def init_state(init_params: Callable, optimizer: Optimizer, m: int, rng,
+               same_init: bool = False):
+    """Agent-stacked train state. ``same_init=True`` matches the theory
+    (theta_k^0 = theta^0); False matches the paper's main experiments
+    (independent inits — the harder cross-initialization merge)."""
+    if same_init:
+        p = init_params(rng)
+        params = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (m,) + x.shape), p)
+    else:
+        params = jax.vmap(init_params)(jax.random.split(rng, m))
+    opt_state = jax.vmap(optimizer.init)(params)
+    return {"params": params, "opt": opt_state,
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def _mix(params, W, impl: str, wire_dtype, partner=None):
+    if impl == "dense":
+        return gossip.mix_dense(params, W, wire_dtype)
+    if impl == "pairwise":
+        return gossip.mix_pairwise(params, partner, wire_dtype=wire_dtype)
+    if impl == "merge":
+        return gossip.global_merge(params, wire_dtype)
+    if impl == "none":
+        return params
+    raise ValueError(impl)
+
+
+def make_dsgd_step(loss_fn: Callable, optimizer: Optimizer, *,
+                   gossip_impl: str = "dense",
+                   wire_dtype=None, monitor: bool = True):
+    """One communication round with ONE local step per agent.
+
+    step(state, batch, W, rng) -> (state, metrics); batch leaves (m, b, ...).
+    """
+
+    def step(state, batch, W, rng):
+        m = jax.tree.leaves(state["params"])[0].shape[0]
+        rngs = jax.random.split(rng, m)
+
+        def one(p, b, r):
+            (l, aux), g = jax.value_and_grad(loss_fn, has_aux=True)(p, b, r)
+            return g, l
+
+        grads, losses = jax.vmap(one)(state["params"], batch, rngs)
+        new_p, new_opt = jax.vmap(optimizer.update)(
+            grads, state["opt"], state["params"])
+        mixed = _mix(new_p, W, gossip_impl, wire_dtype)
+        metrics = {"loss": jnp.mean(losses)}
+        if monitor:
+            gbar = jax.tree.map(lambda g: jnp.mean(g, axis=0), grads)
+            metrics["grad_norm"] = jnp.sqrt(sum(
+                jnp.sum(jnp.square(x)) for x in jax.tree.leaves(gbar)))
+            metrics["consensus"] = consensus_distance(mixed)
+        return {"params": mixed, "opt": new_opt,
+                "step": state["step"] + 1}, metrics
+
+    return step
+
+
+def make_dsgd_round(loss_fn: Callable, optimizer: Optimizer, local_steps: int,
+                    *, gossip_impl: str = "dense", wire_dtype=None,
+                    monitor: bool = True):
+    """One communication round with H local steps (paper: H=100).
+
+    step(state, batches, W, rng): batches leaves (H, m, b, ...) — scanned.
+    """
+
+    def round_fn(state, batches, W, rng):
+        m = jax.tree.leaves(state["params"])[0].shape[0]
+
+        def body(carry, xs):
+            params, opt = carry
+            batch, r = xs
+            rngs = jax.random.split(r, m)
+
+            def one(p, b, rr):
+                (l, aux), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(p, b, rr)
+                return g, l
+
+            grads, losses = jax.vmap(one)(params, batch, rngs)
+            new_p, new_opt = jax.vmap(optimizer.update)(grads, opt, params)
+            gbar = jax.tree.map(lambda g: jnp.mean(g, axis=0), grads)
+            gn = jnp.sqrt(sum(jnp.sum(jnp.square(x))
+                              for x in jax.tree.leaves(gbar)))
+            return (new_p, new_opt), (jnp.mean(losses), gn)
+
+        rngs = jax.random.split(rng, local_steps)
+        (p, o), (losses, gns) = jax.lax.scan(
+            body, (state["params"], state["opt"]), (batches, rngs))
+        mixed = _mix(p, W, gossip_impl, wire_dtype)
+        metrics = {"loss": jnp.mean(losses), "grad_norm": gns[-1]}
+        if monitor:
+            metrics["consensus"] = consensus_distance(mixed)
+        return {"params": mixed, "opt": o,
+                "step": state["step"] + local_steps}, metrics
+
+    return round_fn
+
+
+def make_parallel_step(loss_fn: Callable, optimizer: Optimizer):
+    """Parallel SGD / FedAvg(H=1) baseline: one shared model; gradients are
+    averaged over the m per-agent batches every step (the paper's reference
+    rate O(sigma^2/(m eps^2) + 1/eps))."""
+
+    def step(state, batch, rng):
+        m = jax.tree.leaves(batch)[0].shape[0]
+        rngs = jax.random.split(rng, m)
+
+        def one(b, r):
+            (l, aux), g = jax.value_and_grad(
+                loss_fn, has_aux=True)(state["params"], b, r)
+            return g, l
+
+        grads, losses = jax.vmap(one)(batch, rngs)
+        gbar = jax.tree.map(lambda g: jnp.mean(g, axis=0), grads)
+        new_p, new_opt = optimizer.update(gbar, state["opt"], state["params"])
+        return {"params": new_p, "opt": new_opt,
+                "step": state["step"] + 1}, {"loss": jnp.mean(losses)}
+
+    return step
+
+
+def init_parallel_state(init_params: Callable, optimizer: Optimizer, rng):
+    p = init_params(rng)
+    return {"params": p, "opt": optimizer.init(p),
+            "step": jnp.zeros((), jnp.int32)}

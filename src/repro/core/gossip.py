@@ -1,0 +1,89 @@
+"""Gossip mixing of agent-stacked parameter pytrees.
+
+Every leaf of an agent-stacked pytree has shape (m, ...) with the leading
+axis sharded over the ('pod','agent') mesh axes. Three mixing paths:
+
+* :func:`mix_dense` — the paper-faithful general mixing-matrix form
+  Theta <- Theta W, one ``tensordot`` per leaf. XLA SPMD lowers the
+  contraction over the sharded agent axis to an all-gather (O(m P) wire
+  bytes). Works for ANY doubly-stochastic W, including W=I.
+* :func:`mix_pairwise` — optimized path for (partial) matchings:
+  theta_k <- (1-w) theta_k + w theta_{partner[k]} — one gather along the
+  agent axis (O(P) bytes, lowered to collective-permute/all-to-all).
+* :func:`global_merge` — optimized path for the fully-connected rounds and
+  the paper's single final merging: mean over the agent axis (one
+  all-reduce, O(P) ring bytes) broadcast back.
+
+``wire_dtype`` optionally casts parameters to bf16 for the communication
+only (beyond-paper compression lever; see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def _wire(x, wire_dtype):
+    if wire_dtype is None or x.dtype == wire_dtype:
+        return x, lambda y: y
+    return x.astype(wire_dtype), lambda y: y.astype(x.dtype)
+
+
+def mix_dense(params, W, wire_dtype=None):
+    """Theta <- W Theta  (row k: sum_l W[k,l] theta_l)."""
+    def leaf(x):
+        xw, back = _wire(x, wire_dtype)
+        y = jnp.tensordot(W.astype(xw.dtype), xw, axes=1)
+        return back(y)
+    return jax.tree.map(leaf, params)
+
+
+def mix_pairwise(params, partner, weight=0.5, wire_dtype=None):
+    """theta_k <- (1-w) theta_k + w theta_{partner[k]}; partner: (m,) int32.
+
+    partner[k] == k means agent k idles this round (no communication)."""
+    def leaf(x):
+        xw, back = _wire(x, wire_dtype)
+        peer = jnp.take(xw, partner, axis=0)
+        return back((1.0 - weight) * xw + weight * peer.astype(xw.dtype))
+    return jax.tree.map(leaf, params)
+
+
+def global_merge(params, wire_dtype=None):
+    """Single global merging: theta_k <- mean_l theta_l for every k."""
+    def leaf(x):
+        xw, back = _wire(x, wire_dtype)
+        mean = jnp.mean(xw.astype(jnp.float32), axis=0, keepdims=True)
+        return back(jnp.broadcast_to(mean, xw.shape).astype(xw.dtype))
+    return jax.tree.map(leaf, params)
+
+
+def merged_model(params):
+    """The (counterfactual) globally averaged model: drops the agent axis."""
+    return jax.tree.map(lambda x: jnp.mean(x.astype(jnp.float32), axis=0),
+                        params)
+
+
+# ---------------------------------------------------------------------------
+# shard_map collective variants (explicit psum over the agent mesh axes).
+# Used by the optimized training step in launch/ — identical math to
+# global_merge but guaranteed to lower to one all-reduce.
+# ---------------------------------------------------------------------------
+
+
+def global_merge_shmap(params, mesh, param_pspecs, agent_axes=("pod", "agent")):
+    """Explicit all-reduce merge: pmean over the agent mesh axes under
+    shard_map. ``param_pspecs`` is the full PartitionSpec tree of the
+    agent-stacked params (leading dim = agent axes)."""
+    axes = tuple(a for a in agent_axes if a in mesh.axis_names)
+
+    def body(p):
+        return jax.tree.map(lambda x: jax.lax.pmean(x, axes), p)
+
+    from jax.experimental.shard_map import shard_map
+    f = shard_map(body, mesh=mesh, in_specs=(param_pspecs,),
+                  out_specs=param_pspecs, check_rep=False)
+    return f(params)

@@ -1,0 +1,36 @@
+"""Global merging operators and counterfactual evaluation (paper §4.2-4.3)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gossip import merged_model
+
+
+def weighted_merge(params_stacked, weights):
+    """sum_k w_k theta_k with convex weights (Def. 2's general merge)."""
+    w = jnp.asarray(weights, jnp.float32)
+    w = w / jnp.sum(w)
+    return jax.tree.map(
+        lambda x: jnp.tensordot(w, x.astype(jnp.float32), axes=1), params_stacked)
+
+
+def uniform_merge(params_stacked):
+    return merged_model(params_stacked)
+
+
+def counterfactual_eval(eval_fn, params_stacked):
+    """Evaluate the hypothetical globally-averaged model WITHOUT modifying
+    training state (the light-blue curve of Fig. 2c)."""
+    return eval_fn(merged_model(params_stacked))
+
+
+def gossip_merge_rounds(params_stacked, sampler, rounds: int, rng):
+    """Approximate the final global merging by multiple rounds of gossip on
+    a (e.g. exponential) topology — paper Appendix C.3.4."""
+    from repro.core.gossip import mix_dense
+    p = params_stacked
+    for t in range(rounds):
+        W = sampler(t, rng)
+        p = mix_dense(p, jnp.asarray(W, jnp.float32))
+    return p

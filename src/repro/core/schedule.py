@@ -1,0 +1,142 @@
+"""Temporal communication schedulers — the paper's object of study.
+
+A scheduler maps round t -> mixing matrix W^(t) (numpy, host side). The
+communication *budget* of a run is the accumulated per-round wire cost; the
+paper's question is how to place that budget over time. Schedulers:
+
+* ConstantSchedule      — sparse gossip every round (baseline DSGD).
+* LocalOnlySchedule     — no communication at all (paper's ablation).
+* WindowedSchedule      — fully-connected AllReduce inside [start, end),
+                          sparse gossip elsewhere (Fig. 2a/2b).
+* FinalMergeSchedule    — sparse gossip + ONE global merging at the last
+                          round (the paper's headline method, Fig. 1).
+* PeriodicGlobalSchedule— global averaging every H rounds (Chen et al. 2021
+                          comparison baseline).
+* AdaptiveEdgeSchedule  — beyond-paper: monitors the critical-consensus-edge
+                          condition (Prop. 3): go fully-connected when
+                          Xi_t > kappa * mu_t, else sparse gossip. This is
+                          the adaptive algorithm the paper's §6 calls for.
+
+Every scheduler reports per-round cost in model-size units P:
+dense AllReduce ~ 2P (ring), pairwise exchange ~ P, idle ~ 0 — matching the
+paper's cost model O(mRPT + 2mP).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.core import topology as topo
+
+
+class Schedule:
+    """Base: sparse random-matching gossip every round."""
+
+    def __init__(self, m: int, rounds: int, kind: str = "random",
+                 prob: float = 0.2, seed: int = 0):
+        self.m, self.rounds = m, rounds
+        self.sampler = topo.make_sampler(kind, m, prob)
+        self.rng = np.random.default_rng(seed)
+
+    # -- override points ---------------------------------------------------
+    def is_global(self, t: int, monitor: Optional[dict] = None) -> bool:
+        return False
+
+    def is_local_only(self, t: int) -> bool:
+        return False
+
+    # -- public API ---------------------------------------------------------
+    def mixing_matrix(self, t: int, monitor: Optional[dict] = None
+                      ) -> np.ndarray:
+        if self.is_global(t, monitor):
+            return topo.fully_connected(self.m)
+        if self.is_local_only(t):
+            return topo.identity(self.m)
+        return self.sampler(t, self.rng)
+
+    def round_cost(self, W: np.ndarray) -> float:
+        """Wire cost of one round in units of model size P (per agent)."""
+        if np.allclose(W, np.eye(self.m)):
+            return 0.0
+        if np.allclose(W, topo.fully_connected(self.m)):
+            return 2.0  # ring AllReduce
+        # pairwise matching: 1 P per participating agent
+        active = np.sum(np.diag(W) < 1.0 - 1e-12) / self.m
+        return float(active)
+
+
+class ConstantSchedule(Schedule):
+    pass
+
+
+class LocalOnlySchedule(Schedule):
+    def is_local_only(self, t: int) -> bool:
+        return True
+
+
+class WindowedSchedule(Schedule):
+    """Fully-connected inside [start, end); sparse gossip elsewhere."""
+
+    def __init__(self, m, rounds, start: int, end: int, **kw):
+        super().__init__(m, rounds, **kw)
+        self.start, self.end = start, end
+
+    def is_global(self, t, monitor=None):
+        return self.start <= t < self.end
+
+
+class FinalMergeSchedule(Schedule):
+    """The paper's method: sparse gossip + a single final global merging."""
+
+    def is_global(self, t, monitor=None):
+        return t == self.rounds - 1
+
+
+class PeriodicGlobalSchedule(Schedule):
+    def __init__(self, m, rounds, period: int = 48, **kw):
+        super().__init__(m, rounds, **kw)
+        self.period = period
+
+    def is_global(self, t, monitor=None):
+        return (t + 1) % self.period == 0
+
+
+class AdaptiveEdgeSchedule(Schedule):
+    """Critical-consensus-edge controller (Prop. 3, Eq. 11).
+
+    Goes fully-connected when the measured consensus distance Xi_t exceeds
+    ``kappa * mu_t`` where mu_t is an EMA of the global gradient norm at the
+    averaged model; otherwise sparse gossip. As training converges, mu_t
+    shrinks, the allowed Xi_t band tightens, and communication automatically
+    concentrates in the late phase — exactly the behaviour the paper finds
+    optimal empirically.
+    """
+
+    def __init__(self, m, rounds, kappa: float = 0.5, ema: float = 0.9, **kw):
+        super().__init__(m, rounds, **kw)
+        self.kappa, self.ema = kappa, ema
+        self._mu = None
+        self.global_rounds = []
+
+    def is_global(self, t, monitor=None):
+        if not monitor:
+            return False
+        mu_obs = monitor.get("grad_norm")
+        xi = monitor.get("consensus")
+        if mu_obs is None or xi is None:
+            return False
+        self._mu = (mu_obs if self._mu is None
+                    else self.ema * self._mu + (1 - self.ema) * mu_obs)
+        hit = bool(xi > self.kappa * self._mu)
+        if hit:
+            self.global_rounds.append(t)
+        return hit
+
+
+def make_schedule(name: str, m: int, rounds: int, **kw) -> Schedule:
+    table = {"constant": ConstantSchedule, "local": LocalOnlySchedule,
+             "windowed": WindowedSchedule, "final_merge": FinalMergeSchedule,
+             "periodic": PeriodicGlobalSchedule,
+             "adaptive": AdaptiveEdgeSchedule}
+    return table[name](m, rounds, **kw)

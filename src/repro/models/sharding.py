@@ -1,0 +1,179 @@
+"""Logical sharding specs and their resolution onto concrete meshes.
+
+Param-spec trees mirror the param pytrees exactly; leaves are tuples of
+*logical* axis names (or ``None``). :func:`resolve` substitutes logical names
+with mesh axes per context:
+
+  training  : fsdp->'fsdp', model->'model', expert->'model'   (+agent prefix)
+  serve(sm) : fsdp->None,   model->'model', expert->'model'
+  serve(lg) : fsdp->('pod','data'), model->'model', expert->'model'
+
+A logical axis is silently dropped when the array dim is not divisible by the
+mesh axis size (e.g. kv_heads=8 on a 16-way model axis) — XLA then replicates
+that dim, which is the correct fallback.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+_ACT = threading.local()
+
+
+@contextmanager
+def activation_sharding(mesh, rules):
+    """Ambient context consulted by :func:`constrain` during tracing.
+
+    Enter this around ``jit(...).lower(...)`` (and around execution) so model
+    code emits ``with_sharding_constraint`` on its big intermediates
+    (attention scores, MoE dispatch buffers, logits chunks). Without an
+    active context every ``constrain`` is a no-op — CPU unit tests stay
+    mesh-free."""
+    old = getattr(_ACT, "v", None)
+    _ACT.v = (mesh, rules)
+    try:
+        yield
+    finally:
+        _ACT.v = old
+
+
+def _ctx():
+    return getattr(_ACT, "v", None)
+
+
+def constrain(x, names):
+    """Constrain trailing dims of ``x`` by logical axis names (vmap-safe:
+    names align to the LAST ``len(names)`` dims; non-divisible dims drop)."""
+    ctx = _ctx()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    names = tuple(names)[-x.ndim:]
+    off = x.ndim - len(names)
+    axes = [None] * x.ndim
+    used = set()
+    for i, name in enumerate(names):
+        if name is None:
+            continue
+        target = rules.get(name)
+        if target is None:
+            continue
+        key = tuple(target) if isinstance(target, (tuple, list)) else (target,)
+        if used & set(key):
+            continue
+        size = _axis_size(mesh, target)
+        if size > 1 and x.shape[off + i] % size == 0:
+            axes[off + i] = target
+            used.update(key)
+    # NOTE: applied even when all axes are None — an explicit "replicated"
+    # constraint stops sharded producers (e.g. the d-sharded embedding
+    # gather) from leaking partial layouts into the residual stream.
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*axes)))
+
+
+def constrain_pick(x, fixed, candidates):
+    """Negative-dim constraint helper (vmap-safe: dims index from the end).
+
+    ``fixed``: [(neg_dim, name), ...] always applied (when divisible);
+    ``candidates``: ordered [(neg_dim, name), ...] — the FIRST divisible one
+    is sharded. Used for attention scores / MoE buffers where the shardable
+    dim depends on head/expert counts."""
+    ctx = _ctx()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    axes = [None] * x.ndim
+    used = set()
+
+    def try_set(neg_dim, name):
+        dim = x.ndim + neg_dim
+        if dim < 0 or axes[dim] is not None:
+            return False
+        target = rules.get(name)
+        if target is None:
+            return False
+        key = tuple(target) if isinstance(target, (tuple, list)) else (target,)
+        if used & set(key):
+            return False
+        size = _axis_size(mesh, target)
+        if size > 1 and x.shape[dim] % size == 0:
+            axes[dim] = target
+            used.update(key)
+            return True
+        return False
+
+    for nd, name in fixed:
+        try_set(nd, name)
+    for nd, name in candidates:
+        if try_set(nd, name):
+            break
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*axes)))
+
+
+def logical(*names):
+    """A logical spec leaf: tuple of axis names / None / tuples of names."""
+    return tuple(names)
+
+
+def _axis_size(mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def resolve_leaf(spec_leaf, shape, mesh, rules, prefix=()):
+    """Resolve one logical spec against a concrete array shape + mesh.
+
+    Logical names align to the TRAILING dims of the leaf — stacked leading
+    dims (agent axis, per-segment n_rep) are skipped automatically; the
+    ``prefix`` mesh axes claim the leading dims."""
+    axes = list(prefix) + [None] * (len(shape) - len(prefix))
+    names = tuple(spec_leaf)[-max(0, len(shape) - len(prefix)):]
+    offset = len(shape) - len(names)
+    for i, name in enumerate(names):
+        dim = offset + i
+        if name is None:
+            continue
+        target = rules.get(name, None)
+        if target is None:
+            continue
+        size = _axis_size(mesh, target)
+        if size > 1 and shape[dim] % size == 0 and axes[dim] is None:
+            axes[dim] = target
+    return P(*axes)
+
+
+def resolve(spec_tree, shape_tree, mesh, rules, prefix=()):
+    """Resolve a logical spec tree into a PartitionSpec tree.
+
+    ``shape_tree`` is a pytree of arrays or ShapeDtypeStructs matching
+    ``spec_tree``; ``prefix`` are mesh axes for leading stacked dims (e.g.
+    the agent axis) prepended to every leaf.
+    """
+    return jax.tree.map(
+        lambda s, x: resolve_leaf(s, x.shape, mesh, rules, prefix),
+        spec_tree, shape_tree,
+        is_leaf=lambda s: isinstance(s, tuple) and all(
+            isinstance(e, (str, tuple, type(None))) for e in s),
+    )
+
+
+TRAIN_RULES = {"fsdp": "fsdp", "model": "model", "expert": "model",
+               "data": ("pod", "agent")}
+SERVE_RULES_SMALL = {"fsdp": None, "model": "model", "expert": "model",
+                     "data": "data"}
+
+
+def serve_rules(mesh, big: bool):
+    data_axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    da = data_axes if len(data_axes) > 1 else data_axes[0]
+    rules = {"model": "model", "expert": "model", "data": da}
+    rules["fsdp"] = da if big else None
+    return rules

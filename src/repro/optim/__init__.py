@@ -1,0 +1,3 @@
+from repro.optim.optim import (Optimizer, adamw, make_optimizer, sgd,  # noqa: F401
+                               cosine_schedule, constant_schedule,
+                               warmup_cosine)

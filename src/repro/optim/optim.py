@@ -1,0 +1,121 @@
+"""Optimizers as pure pytree transforms (SGD/momentum, AdamW) + LR schedules.
+
+Implemented from scratch (no optax in this environment). All transforms are
+vmap-compatible: core/dsgd.py vmaps ``update`` over the leading agent axis so
+every agent maintains an independent optimizer state, as required by
+decentralized learning (Algorithm 1 of the paper, "Optimizer" line).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+# ------------------------------------------------------------- LR schedules
+
+
+def constant_schedule(lr):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_schedule(lr, total_steps, final_frac=0.1):
+    def f(step):
+        t = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return jnp.asarray(lr * (final_frac + (1 - final_frac) * cos),
+                           jnp.float32)
+    return f
+
+
+def warmup_cosine(lr, total_steps, warmup=100, final_frac=0.1):
+    cos = cosine_schedule(lr, total_steps, final_frac)
+    def f(step):
+        w = jnp.minimum(step / max(warmup, 1), 1.0)
+        return w * cos(jnp.maximum(step - warmup, 0))
+    return f
+
+
+# ---------------------------------------------------------------- optimizers
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable  # params -> state
+    update: Callable  # (grads, state, params, step) -> (new_params, new_state)
+    name: str = ""
+
+
+def sgd(schedule, momentum: float = 0.0, weight_decay: float = 0.0,
+        nesterov: bool = False) -> Optimizer:
+    sched = schedule if callable(schedule) else constant_schedule(schedule)
+
+    def init(params):
+        if momentum == 0.0:
+            return {"step_count": jnp.zeros((), jnp.int32)}
+        return {"mu": jax.tree.map(jnp.zeros_like, params),
+                "step_count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, step=None):
+        step = state["step_count"] if step is None else step
+        lr = sched(step)
+        if weight_decay:
+            grads = jax.tree.map(lambda g, p: g + weight_decay * p, grads,
+                                 params)
+        if momentum == 0.0:
+            new_params = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+            return new_params, {"step_count": state["step_count"] + 1}
+        mu = jax.tree.map(lambda m, g: momentum * m + g, state["mu"], grads)
+        upd = (jax.tree.map(lambda m, g: momentum * m + g, mu, grads)
+               if nesterov else mu)
+        new_params = jax.tree.map(lambda p, u: p - lr * u, params, upd)
+        return new_params, {"mu": mu, "step_count": state["step_count"] + 1}
+
+    return Optimizer(init=init, update=update, name="sgd")
+
+
+def adamw(schedule, b1=0.9, b2=0.999, eps=1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    sched = schedule if callable(schedule) else constant_schedule(schedule)
+
+    def init(params):
+        return {"m": jax.tree.map(jnp.zeros_like, params),
+                "v": jax.tree.map(jnp.zeros_like, params),
+                "step_count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, step=None):
+        count = state["step_count"] + 1
+        step = count if step is None else step + 1
+        lr = sched(step - 1)
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"],
+                         grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g),
+                         state["v"], grads)
+        c = count.astype(jnp.float32)
+        bc1 = 1 - b1 ** c
+        bc2 = 1 - b2 ** c
+
+        def upd(p, m_, v_):
+            mhat = m_ / bc1
+            vhat = v_ / bc2
+            return p - lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p)
+
+        new_params = jax.tree.map(upd, params, m, v)
+        return new_params, {"m": m, "v": v, "step_count": count}
+
+    return Optimizer(init=init, update=update, name="adamw")
+
+
+def make_optimizer(name: str, lr, total_steps: int = 1000,
+                   weight_decay: float = 5e-4, momentum: float = 0.9,
+                   schedule: str = "constant") -> Optimizer:
+    sched = {"constant": constant_schedule(lr),
+             "cosine": cosine_schedule(lr, total_steps),
+             "warmup_cosine": warmup_cosine(lr, total_steps)}[schedule]
+    if name == "sgd":
+        return sgd(sched, momentum=momentum, weight_decay=weight_decay)
+    if name == "adamw":
+        return adamw(sched, weight_decay=weight_decay)
+    raise ValueError(name)

@@ -1,0 +1,1 @@
+from repro.serving.engine import generate, make_decode_fn, make_prefill_fn  # noqa: F401

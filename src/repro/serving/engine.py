@@ -1,0 +1,58 @@
+"""Batched serving engine for the (merged) model.
+
+The artifact decentralized training produces — after the paper's single
+global merging — is ONE model; serving it is plain sharded inference:
+prefill builds the KV caches / recurrent states, then a jitted decode step
+appends one token per request per call (greedy or temperature sampling).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def make_prefill_fn(model, max_len: Optional[int] = None):
+    def prefill(params, batch):
+        return model.prefill(params, batch, max_len=max_len)
+    return jax.jit(prefill)
+
+
+def make_decode_fn(model):
+    def decode(params, caches, tokens, index):
+        return model.decode_step(params, caches, tokens, index)
+    return jax.jit(decode)
+
+
+def sample_token(logits, rng, temperature: float = 0.0):
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(rng, logits / temperature, axis=-1).astype(
+        jnp.int32)
+
+
+def generate(model, params, batch, max_new: int, *, temperature: float = 0.0,
+             rng=None, max_len: Optional[int] = None):
+    """batch: model input dict with 'tokens' (B, S_prompt). Returns
+    (B, max_new) generated tokens. Host-side decode loop around jitted
+    prefill/decode steps."""
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    B, S = batch["tokens"].shape
+    prefix = batch["patch_embeds"].shape[1] if "patch_embeds" in batch else 0
+    S = S + prefix  # absolute positions include the multimodal prefix
+    total = max_len or (S + max_new)
+    prefill = make_prefill_fn(model, max_len=total)
+    decode = make_decode_fn(model)
+    logits, caches = prefill(params, batch)
+    out = []
+    tok = None
+    for i in range(max_new):
+        rng, k = jax.random.split(rng)
+        tok = sample_token(logits, k, temperature)
+        out.append(np.asarray(tok))
+        logits, caches = decode(params, caches, tok[:, None],
+                                jnp.asarray(S + i, jnp.int32))
+    return np.stack(out, axis=1)

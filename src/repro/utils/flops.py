@@ -1,0 +1,76 @@
+"""Analytic parameter counts and MODEL_FLOPS (6·N·D) for the roofline table.
+
+N (and N_active for MoE) are derived from the *actual* initialised shapes
+(via jax.eval_shape over Model.init_params) so they track the real configs,
+not hand-derived formulas. D is the number of trained tokens in the step.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def _count(tree) -> int:
+    return int(sum(np.prod(x.shape) for x in jax.tree.leaves(tree)))
+
+
+def param_counts(model) -> dict:
+    """{'total': N, 'active': N_active} from the init shapes."""
+    cfg: ModelConfig = model.cfg
+    shapes = jax.eval_shape(model.init_params, jax.random.PRNGKey(0))
+    total = _count(shapes)
+    active = total
+    if cfg.moe is not None:
+        # routed experts: only top_k/E of expert params are active per token
+        def moe_leaves(tree):
+            n = 0
+            if isinstance(tree, dict):
+                for k, v in tree.items():
+                    if k == "ffn" and isinstance(v, dict) and "router" in v:
+                        for kk in ("w_in", "w_gate", "w_out"):
+                            if kk in v:
+                                n += int(np.prod(v[kk].shape))
+                    else:
+                        n += moe_leaves(v)
+            return n
+        routed = moe_leaves(shapes)
+        frac = cfg.moe.top_k / cfg.moe.num_experts
+        active = total - routed + int(routed * frac)
+    return {"total": total, "active": active}
+
+
+def model_flops(model, shape: ShapeConfig) -> dict:
+    """MODEL_FLOPS for one step: 6*N_active*D train, 2*N_active*D inference
+    (+ attention term reported separately)."""
+    cfg: ModelConfig = model.cfg
+    counts = param_counts(model)
+    n_act = counts["active"]
+    if shape.kind == "train":
+        D = shape.global_batch * shape.seq_len
+        base = 6 * n_act * D
+    elif shape.kind == "prefill":
+        D = shape.global_batch * shape.seq_len
+        base = 2 * n_act * D
+    else:  # decode: one token per request
+        D = shape.global_batch
+        base = 2 * n_act * D
+    # attention score/value FLOPs (full attention; window caps the length)
+    S = shape.seq_len
+    a = cfg.attn
+    eff = S
+    win = cfg.layer_period[0].window
+    n_attn_layers = sum(1 for s in cfg.layer_specs()
+                        if s.mixer in ("gqa", "mla"))
+    if all(s.window for s in cfg.layer_specs() if s.mixer == "gqa"):
+        eff = min(S, max((s.window or S) for s in cfg.layer_specs()))
+    if shape.kind == "decode":
+        attn = (4 * shape.global_batch * eff * a.num_heads * a.head_dim
+                * n_attn_layers)
+    else:
+        mult = 12 if shape.kind == "train" else 4
+        attn = (mult * shape.global_batch * S * eff // 2 * a.num_heads
+                * a.head_dim * n_attn_layers)
+    return {"model_flops": int(base), "attn_flops": int(attn),
+            "tokens": D, **counts}

@@ -1,0 +1,97 @@
+"""Parse collective traffic out of optimized HLO text.
+
+``collective_bytes(hlo_text)`` builds a symbol table of result shapes, then
+sums *operand* bytes of every communication op:
+  all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+counting ``-start`` ops once (their ``-done`` twins are skipped). Tuple
+shapes are summed over components. Ops inside while-loop bodies are
+multiplied by the loop trip count when it is statically recoverable from
+the HLO (scan-over-layers makes this essential).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+    "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?[^)=]*\)?)\s*"
+                     r"([\w\-]+)\(")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo: str):
+    """Returns (per_kind_bytes: dict, total_bytes: int).
+
+    Bytes = result bytes of each collective op (for all-gather this is the
+    gathered size; for all-reduce the tensor size; both are what crosses the
+    wire per participating device up to the ring factor)."""
+    lines = hlo.splitlines()
+
+    # trip counts: find while ops with known trip count in backend config
+    # XLA optimized HLO annotates known trip counts as
+    # "known_trip_count":{"n":"12"} inside while backend_config.
+    per_kind = defaultdict(int)
+    count = defaultdict(int)
+
+    # build nested computation -> trip count map
+    comp_trip = {}
+    cur_comp = None
+    comp_re = re.compile(r"^(%?[\w.\-]+)\s*(\([^)]*\))?\s*->.*{$|^ENTRY")
+    body_of = {}
+    for ln in lines:
+        mwhile = re.search(r"while\(", ln)
+        if mwhile:
+            mtrip = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', ln)
+            mbody = re.search(r"body=%?([\w.\-]+)", ln)
+            if mbody:
+                body_of[mbody.group(1)] = (
+                    int(mtrip.group(1)) if mtrip else 1)
+
+    cur = None
+    cur_mult = 1
+    for ln in lines:
+        mdef = re.match(r"^%?([\w.\-]+)\s*(\([^{]*\))?\s*->\s*.*\{\s*$", ln)
+        if mdef:
+            cur = mdef.group(1)
+            cur_mult = body_of.get(cur, 1)
+            continue
+        if ln.startswith("ENTRY"):
+            cur = "__entry__"
+            cur_mult = 1
+            continue
+        stripped = ln.strip()
+        for kind in _COLLECTIVES:
+            # match "= <shape> <kind>(" or "<kind>-start("
+            m = re.search(r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\]\S*))\s+"
+                          + kind + r"(-start)?\(", stripped)
+            if m:
+                b = shape_bytes(m.group(1))
+                per_kind[kind] += b * cur_mult
+                count[kind] += cur_mult
+                break
+            if re.search(kind + r"-done\(", stripped):
+                break
+    total = sum(per_kind.values())
+    return dict(per_kind), total, dict(count)

@@ -1,0 +1,9 @@
+import os
+
+# Tests run single-device (the dry-run sets its own 512-device env in a
+# subprocess); keep CPU math deterministic-ish and quiet.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

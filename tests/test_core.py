@@ -1,0 +1,152 @@
+"""Property tests (hypothesis) for the paper's core machinery: topology,
+gossip, consensus contraction (Lemma D.1), schedules, merging."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import consensus, gossip, topology as topo
+from repro.core.merge import gossip_merge_rounds, weighted_merge
+from repro.core.schedule import make_schedule
+
+AGENTS = st.sampled_from([2, 4, 8, 16])
+
+
+@given(m=AGENTS, seed=st.integers(0, 1000), prob=st.floats(0.0, 1.0))
+@settings(max_examples=40, deadline=None)
+def test_random_matching_doubly_stochastic(m, seed, prob):
+    W = topo.random_matching(m, prob, np.random.default_rng(seed))
+    assert topo.is_doubly_stochastic(W)
+
+
+@given(m=AGENTS, t=st.integers(0, 20))
+@settings(max_examples=30, deadline=None)
+def test_named_topologies_doubly_stochastic(m, t):
+    for W in (topo.ring(m), topo.exponential(m), topo.fully_connected(m),
+              topo.exponential_round(m, t)):
+        assert topo.is_doubly_stochastic(W)
+
+
+def test_spectral_p_ordering():
+    m = 16
+    p_full = topo.spectral_p(topo.fully_connected(m))
+    p_ring = topo.spectral_p(topo.ring(m))
+    p_id = topo.spectral_p(topo.identity(m))
+    assert p_full == pytest.approx(1.0, abs=1e-9)
+    assert p_id == pytest.approx(0.0, abs=1e-9)
+    assert 0.0 < p_ring < 1.0
+    # better-connected graphs have larger p (Eq. 10's p)
+    assert p_full > p_ring > p_id
+
+
+def test_expected_p_random_graph_theta1():
+    """Random matchings achieve p = Theta(1) (paper §5.2 'Why limited but
+    nonzero communication enables mergeability')."""
+    m = 16
+    rng = np.random.default_rng(0)
+    p = topo.expected_p(topo.make_sampler("random", m, 0.2), m, 400, rng)
+    assert p > 0.05  # bounded away from 0 despite ~20% activation
+
+
+@given(seed=st.integers(0, 100))
+@settings(max_examples=20, deadline=None)
+def test_consensus_contraction_lemma_d1(seed):
+    """E||Theta W - bar||^2 <= (1-p) ||Theta - bar||^2 (Assumption 1),
+    checked empirically for the random-matching topology."""
+    m = 8
+    rng = np.random.default_rng(seed)
+    theta = {"w": jnp.asarray(rng.normal(size=(m, 40)), jnp.float32)}
+    xi0 = float(consensus.consensus_distance(theta)) ** 2
+    xis = []
+    for t in range(50):
+        W = jnp.asarray(topo.random_matching(m, 0.5, rng), jnp.float32)
+        mixed = gossip.mix_dense(theta, W)
+        xis.append(float(consensus.consensus_distance(mixed)) ** 2)
+    assert np.mean(xis) < xi0  # contraction on average
+    for xi in xis:
+        assert xi <= xi0 + 1e-5  # never expands (doubly stochastic)
+
+
+def test_global_merge_equals_mean():
+    m = 4
+    theta = {"a": jnp.arange(m * 6, dtype=jnp.float32).reshape(m, 6)}
+    merged = gossip.global_merge(theta)
+    np.testing.assert_allclose(merged["a"][0], theta["a"].mean(0), atol=1e-6)
+    np.testing.assert_allclose(merged["a"][2], theta["a"].mean(0), atol=1e-6)
+    # equivalent to mixing with the fully-connected W
+    densed = gossip.mix_dense(theta, jnp.asarray(
+        topo.fully_connected(m), jnp.float32))
+    np.testing.assert_allclose(merged["a"], densed["a"], atol=1e-6)
+
+
+def test_pairwise_mix_matches_dense_matching():
+    m = 8
+    rng = np.random.default_rng(3)
+    W = topo.random_matching(m, 0.8, rng)
+    partner = jnp.asarray(topo.partner_array(W), jnp.int32)
+    theta = {"x": jax.random.normal(jax.random.PRNGKey(0), (m, 13))}
+    a = gossip.mix_dense(theta, jnp.asarray(W, jnp.float32))
+    b = gossip.mix_pairwise(theta, partner)
+    np.testing.assert_allclose(a["x"], b["x"], atol=1e-6)
+
+
+@given(w=st.lists(st.floats(0.01, 10.0), min_size=4, max_size=4))
+@settings(max_examples=20, deadline=None)
+def test_weighted_merge_convexity(w):
+    m = 4
+    theta = {"x": jax.random.normal(jax.random.PRNGKey(1), (m, 7))}
+    out = weighted_merge(theta, jnp.asarray(w))
+    lo = theta["x"].min(0) - 1e-5
+    hi = theta["x"].max(0) + 1e-5
+    assert bool(jnp.all(out["x"] >= lo)) and bool(jnp.all(out["x"] <= hi))
+
+
+def test_gossip_merge_rounds_approaches_global_merge():
+    """Appendix C.3.4: several exponential-gossip rounds approximate the
+    perfect global merge."""
+    m = 8
+    theta = {"x": jax.random.normal(jax.random.PRNGKey(2), (m, 29))}
+    target = gossip.merged_model(theta)
+    sampler = topo.make_sampler("exponential", m)
+    approx = gossip_merge_rounds(theta, sampler, rounds=3,
+                                 rng=np.random.default_rng(0))
+    err = float(jnp.max(jnp.abs(approx["x"] - target["x"][None])))
+    assert err < 1e-4  # log2(8)=3 rounds of exponential pairing = exact
+
+
+def test_schedules_place_global_rounds_correctly():
+    m, T = 8, 50
+    s = make_schedule("final_merge", m, T)
+    assert not s.is_global(0) and not s.is_global(T - 2)
+    assert s.is_global(T - 1)
+    w = make_schedule("windowed", m, T, start=10, end=15)
+    assert w.is_global(12) and not w.is_global(15)
+    p = make_schedule("periodic", m, T, period=10)
+    assert p.is_global(9) and p.is_global(19) and not p.is_global(10)
+
+
+def test_schedule_costs_match_paper_cost_model():
+    """O(mRPT + 2mP): sparse rounds cost ~R*P per agent, AllReduce 2P."""
+    m, T = 16, 100
+    s = make_schedule("final_merge", m, T, prob=0.2, seed=0)
+    costs = [s.round_cost(s.mixing_matrix(t)) for t in range(T)]
+    assert costs[-1] == 2.0  # final AllReduce
+    mean_sparse = np.mean(costs[:-1])
+    assert 0.05 < mean_sparse < 0.4  # ~R=0.2 participation
+
+
+def test_u_term_negative_under_progressive_sharpening():
+    """On a quartic-ish loss with aligned curvature the U-term estimator
+    should produce a finite scalar; sign depends on the landscape (sanity:
+    runs, finite)."""
+    m = 4
+
+    def loss_fn(p, batch):
+        x = p["x"]
+        return jnp.sum(x ** 4) + 0.1 * jnp.sum(x ** 2), {}
+
+    params = {"x": jnp.stack([jnp.array([1.0 + 0.1 * k, -1.0])
+                              for k in range(m)])}
+    u = consensus.u_term(loss_fn, params, None)
+    assert bool(jnp.isfinite(u))

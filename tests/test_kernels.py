@@ -1,0 +1,117 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles
+(interpret mode executes kernel bodies in Python on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.topology import fully_connected, random_matching, ring
+from repro.kernels.flash_attention import flash_attention_bh
+from repro.kernels.gossip_mix import gossip_mix_panel
+from repro.kernels.ops import flash_attention, gossip_mix
+from repro.kernels.ref import attention_ref, gossip_mix_ref
+
+
+@pytest.mark.parametrize("S,hd,block", [
+    (128, 64, 64), (256, 64, 128), (256, 128, 64), (512, 32, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_shapes_dtypes(S, hd, block, dtype):
+    B, H = 2, 2
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, S, H, hd), dtype)
+    v = jax.random.normal(ks[2], (B, S, H, hd), dtype)
+    ref = attention_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                        v.astype(jnp.float32), causal=True)
+    out = flash_attention(q, k, v, causal=True, block_q=block, block_k=block)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(out.astype(jnp.float32), ref, atol=tol,
+                               rtol=tol)
+
+
+@pytest.mark.parametrize("window", [32, 64, 128])
+def test_flash_attention_sliding_window(window):
+    B, S, H, hd = 1, 256, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q, k, v = (jax.random.normal(kk, (B, S, H, hd)) for kk in ks)
+    ref = attention_ref(q, k, v, causal=True, window=window)
+    out = flash_attention(q, k, v, causal=True, window=window,
+                          block_q=64, block_k=64)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_gqa_expansion():
+    B, S, H, Kv, hd = 2, 128, 8, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, Kv, hd))
+    v = jax.random.normal(ks[2], (B, S, Kv, hd))
+    ref = attention_ref(q, jnp.repeat(k, H // Kv, 2),
+                        jnp.repeat(v, H // Kv, 2), causal=True)
+    out = flash_attention(q, k, v, causal=True, block_q=64, block_k=64)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("m,D,block_d", [
+    (4, 64, 32), (8, 1000, 512), (16, 4096, 512), (8, 333, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gossip_mix_panel_sweep(m, D, block_d, dtype):
+    rng = np.random.default_rng(0)
+    W = jnp.asarray(random_matching(m, 0.7, rng), jnp.float32)
+    theta = jax.random.normal(jax.random.PRNGKey(3), (m, D), dtype)
+    ref = gossip_mix_ref(W, theta)
+    out = gossip_mix_panel(W, theta, block_d=block_d)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-6
+    np.testing.assert_allclose(out.astype(jnp.float32),
+                               ref.astype(jnp.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("topo", ["ring", "full"])
+def test_gossip_mix_pytree_matches_dense(topo):
+    m = 8
+    W = jnp.asarray(ring(m) if topo == "ring" else fully_connected(m),
+                    jnp.float32)
+    tree = {"a": jax.random.normal(jax.random.PRNGKey(4), (m, 17, 5)),
+            "b": {"c": jax.random.normal(jax.random.PRNGKey(5), (m, 33))}}
+    out = gossip_mix(W, tree)
+    from repro.core.gossip import mix_dense
+    ref = mix_dense(tree, W)
+    for o, r in zip(jax.tree.leaves(out), jax.tree.leaves(ref)):
+        np.testing.assert_allclose(o, r, atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("window", [None, 48])
+def test_blockwise_xla_attention_matches_sdpa(window):
+    """The flash-style XLA path (used by the dry-run §Perf variants) must
+    match the materialised-score reference."""
+    import dataclasses
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.models import attention as attn
+    cfg = get_config("yi-34b").reduced()
+    lspec = dataclasses.replace(cfg.layer_period[0], window=window)
+    params = attn.init_gqa(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 96
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model))
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    y_ref, _ = attn.gqa_forward(params, x, cfg=cfg, lspec=lspec,
+                                positions=pos, mode="train")
+    cfg2 = cfg.replace(dist=dataclasses.replace(cfg.dist, attn_block=32))
+    y_blk, _ = attn.gqa_forward(params, x, cfg=cfg2, lspec=lspec,
+                                positions=pos, mode="train")
+    np.testing.assert_allclose(y_blk, y_ref, atol=2e-4, rtol=2e-4)
+
+
+def test_gossip_mix_preserves_mean():
+    """Doubly-stochastic mixing preserves the average model — the invariant
+    the paper's final merge relies on."""
+    m = 8
+    rng = np.random.default_rng(1)
+    theta = jax.random.normal(jax.random.PRNGKey(6), (m, 257))
+    for t in range(5):
+        W = jnp.asarray(random_matching(m, 0.5, rng), jnp.float32)
+        theta2 = gossip_mix_panel(W, theta)
+        np.testing.assert_allclose(theta2.mean(0), theta.mean(0), atol=1e-5)
+        theta = theta2

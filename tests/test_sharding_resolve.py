@@ -1,0 +1,72 @@
+"""Regression tests for the sharding resolver.
+
+The trailing-dim alignment matters: stacked layer params carry extra leading
+(agent, n_rep) dims; an early version aligned specs from the front, which
+silently model-sharded w_in's *contraction* dim and produced 4x collective
+blow-ups in the dry-run. These tests pin the correct behaviour.
+"""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.models.sharding import logical as L
+from repro.models.sharding import resolve_leaf
+from repro.utils import flops as flops_mod
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+
+
+MESH = FakeMesh({"pod": 1, "agent": 16, "fsdp": 1, "model": 16})
+RULES = {"fsdp": "fsdp", "model": "model", "expert": "model"}
+
+
+def test_trailing_alignment_with_stacked_dims():
+    # (m, n_rep, d, ff) with spec ("fsdp","model") must shard ff, NOT d
+    ps = resolve_leaf(L("fsdp", "model"), (16, 16, 2048, 8192), MESH, RULES,
+                      prefix=(("pod", "agent"),))
+    assert ps == P(("pod", "agent"), None, None, "model")
+
+
+def test_unstacked_embed():
+    ps = resolve_leaf(L("fsdp", "model"), (16, 50432, 2048), MESH, RULES,
+                      prefix=(("pod", "agent"),))
+    assert ps == P(("pod", "agent"), None, "model")
+
+
+def test_non_divisible_axis_dropped():
+    # kv_dim 8 heads not divisible by model=16 -> replicated
+    ps = resolve_leaf(L(None, "model"), (4, 2048, 8), MESH, RULES)
+    assert ps == P(None, None, None)
+
+
+def test_expert_rule_maps_to_model_axis():
+    ps = resolve_leaf(L("expert", "fsdp", None), (2, 3, 128, 7168, 2048),
+                      MESH, RULES, prefix=(("pod", "agent"),))
+    assert ps == P(("pod", "agent"), None, "model", None, None)
+
+
+def test_model_flops_scaling():
+    """6·N·D scaling: train flops ~3x prefill flops for the same tokens;
+    MoE active < total."""
+    from repro.configs import INPUT_SHAPES, get_config
+    from repro.models import build_model
+    model = build_model(get_config("olmo-1b"))
+    tr = flops_mod.model_flops(model, INPUT_SHAPES["train_4k"])
+    assert tr["total"] == tr["active"]  # dense
+    assert tr["model_flops"] == 6 * tr["active"] * tr["tokens"]
+    moe = build_model(get_config("arctic-480b"))
+    cm = flops_mod.param_counts(moe)
+    assert cm["active"] < 0.3 * cm["total"]  # 128-expert top-2 sparsity
+
+
+def test_decode_flops_tiny_vs_prefill():
+    from repro.configs import INPUT_SHAPES, get_config
+    from repro.models import build_model
+    model = build_model(get_config("olmo-1b"))
+    d = flops_mod.model_flops(model, INPUT_SHAPES["decode_32k"])
+    p = flops_mod.model_flops(model, INPUT_SHAPES["prefill_32k"])
+    assert d["model_flops"] < p["model_flops"] / 1000
