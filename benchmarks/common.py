@@ -94,7 +94,8 @@ def run_schedule(schedule_name, rounds=ROUNDS, seed=0, track=False,
                    "consensus": float(mets["consensus"])}
         if track and (t % 5 == 0 or t == rounds - 1):
             curves["local"].append(float(jnp.mean(vacc(state["params"]))))
-            curves["merged"].append(float(acc(gossip.merged_model(
+            # per-round tracking loop: per-leaf variant, no panel copy
+            curves["merged"].append(float(acc(gossip.merged_model_tree(
                 state["params"]))))
             curves["xi"].append(monitor["consensus"])
     local = float(jnp.mean(vacc(state["params"])))

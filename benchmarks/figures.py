@@ -93,7 +93,9 @@ def table1_convergence_rates():
     dstep = jax.jit(dsgd.make_dsgd_step(loss_fn, opt))
     from repro.core.schedule import make_schedule
     sched = make_schedule("constant", M, rounds, prob=0.2, seed=0)
-    from repro.core.gossip import merged_model
+    # per-round eval loop: the per-leaf variant avoids re-panelising the
+    # full stacked state on every call
+    from repro.core.gossip import merged_model_tree
 
     rng_np = np.random.default_rng(2)
     key = jax.random.PRNGKey(1)
@@ -111,7 +113,7 @@ def table1_convergence_rates():
         dstate, _ = dstep(dstate, batch, jnp.asarray(W, jnp.float32), k2)
         if t >= rounds - 20:
             gpar.append(float(gn_fn(pstate["params"], eval_batch)))
-            gmerged.append(float(gn_fn(merged_model(dstate["params"]),
+            gmerged.append(float(gn_fn(merged_model_tree(dstate["params"]),
                                        eval_batch)))
     us = (time.perf_counter() - t0) * 1e6
     derived = {"parallel_sgd_gradsq": round(float(np.mean(gpar)), 6),
@@ -274,6 +276,19 @@ def beyond_bf16_gossip():
     return us, out
 
 
+def panel_microbench():
+    """Flat-panel engine vs per-leaf tree-map path: one communication round
+    (gossip mix + consensus monitor) + final global merge on a real reduced
+    LM tree. derived = us_per_round for both engines and the speedup (the
+    acceptance bar is >=1.5x at the default size; see BENCH_panel.json for
+    the committed trajectory)."""
+    from benchmarks.panel_bench import SIZES, bench_size
+    t0 = time.perf_counter()
+    derived = bench_size(reps=2, **SIZES["default"])
+    us = (time.perf_counter() - t0) * 1e6
+    return us, derived
+
+
 def kernels_microbench():
     """Kernel wrappers: correctness vs oracle (interpret mode) + XLA-path
     timing of the same math on CPU. derived = max abs err of both kernels."""
@@ -297,6 +312,13 @@ def kernels_microbench():
     from repro.kernels.gossip_mix import gossip_mix_panel
     err_mix = float(jnp.max(jnp.abs(gossip_mix_panel(W, theta)
                                     - ref_mix(W, theta))))
+    from repro.kernels.panel_reduce import panel_mean_consensus
+    from repro.kernels.ref import panel_mean_consensus_ref
+    mean_k, sq_k = panel_mean_consensus(theta)
+    mean_r, sq_r = panel_mean_consensus_ref(theta)
+    err_reduce = max(float(jnp.max(jnp.abs(mean_k - mean_r))),
+                     abs(float(sq_k - sq_r)) / max(float(sq_r), 1e-9))
     return us_attn + us_mix, {"attn_ref_us": round(us_attn, 1),
                               "mix_ref_us": round(us_mix, 1),
-                              "flash_err": err_attn, "mix_err": err_mix}
+                              "flash_err": err_attn, "mix_err": err_mix,
+                              "panel_reduce_err": err_reduce}

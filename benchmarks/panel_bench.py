@@ -1,0 +1,145 @@
+"""Microbench: fused panel communication round vs per-leaf tree-map path.
+
+One "round" of the communication layer = gossip mixing with a random
+matching W + the consensus-distance monitor; the run finishes with the
+paper's single global merging. Two engines, identical math:
+
+* **tree** — the per-leaf reference path: one tensordot per pytree leaf,
+  a Python loop over leaves for the consensus monitor, one jitted dispatch
+  AND one host sync per round (how launch/train.py drove rounds before the
+  panel engine).
+* **panel** — the flat-panel engine: state flattened once to an (m, D)
+  panel, all rounds scanned on device in ONE donated dispatch, mixing as a
+  single fused matmul per round, consensus as a fused reduction, a single
+  device_get for the whole segment.
+
+``python -m benchmarks.panel_bench`` writes BENCH_panel.json with
+us_per_round for both paths at two sizes.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gossip, topology
+from repro.core import panel as panel_mod
+from repro.core.consensus import consensus_distance_tree
+
+SIZES = {
+    # ~7.2M params/agent (x16 agents = 461MB state): the donation win —
+    # the undonated tree path copies the full stacked state every round
+    "default": dict(m=16, d_model=256, layers=8, vocab=512, rounds=8),
+    # the CPU-preset training tree (what launch/train.py --preset cpu
+    # runs). At this tiny scale both paths are dominated by the shared
+    # memory-bound consensus reduction, so the win is smaller.
+    "cpu_preset": dict(m=8, d_model=128, layers=2, vocab=256, rounds=32),
+}
+
+
+def _make_tree(m, d_model, layers, vocab, seed=0):
+    """Agent-stacked params of a real reduced LM (olmo-1b family) — the
+    honest leaf composition (embeddings, per-layer stacks, norms)."""
+    from repro.configs import get_config
+    from repro.models import build_model
+    cfg = get_config("olmo-1b").reduced(d_model=d_model, layers=layers,
+                                        vocab=vocab)
+    model = build_model(cfg)
+    return jax.vmap(model.init_params)(
+        jax.random.split(jax.random.PRNGKey(seed), m))
+
+
+def bench_size(m, d_model, layers, vocab, rounds, reps=3):
+    tree = _make_tree(m, d_model, layers, vocab)
+    spec = panel_mod.make_spec(tree)
+    Ws = jnp.asarray(np.stack([
+        topology.random_matching(m, 0.5, np.random.default_rng(t))
+        for t in range(rounds)]), jnp.float32)
+
+    # ---- per-leaf tree-map path: dispatch + host sync per round
+    @jax.jit
+    def tree_round(t, W):
+        mixed = gossip.mix_dense_tree(t, W)
+        return mixed, consensus_distance_tree(mixed)
+
+    def run_tree():
+        t = tree
+        xi = 0.0
+        for r in range(rounds):
+            t, x = tree_round(t, Ws[r])
+            xi = float(x)  # per-round monitor readback (old driver)
+        merged = gossip.global_merge_tree(t)
+        jax.block_until_ready(jax.tree.leaves(merged)[0])
+        return xi
+
+    # ---- fused panel path: one donated, scanned dispatch per segment
+    def seg(pan, Ws):
+        def body(p, W):
+            mixed = panel_mod.mix_dense(p, W)
+            return mixed, panel_mod.consensus_distance(mixed)
+        pan, xis = jax.lax.scan(body, pan, Ws)
+        return panel_mod.global_merge(pan), xis
+
+    seg_fn = jax.jit(seg, donate_argnums=(0,))
+
+    def run_panel(pan):
+        merged, xis = seg_fn(pan, Ws)
+        xis = jax.device_get(xis)  # ONE transfer for the segment
+        jax.block_until_ready(list(merged.values()))
+        return float(xis[-1])
+
+    def fresh_panel():
+        pan = {k: v + 0.0 for k, v in  # copy: seg_fn donates its input
+               panel_mod.to_panel(tree, spec).items()}
+        jax.block_until_ready(list(pan.values()))
+        return pan
+
+    # numerical parity of the two engines on the same W sequence
+    xi_tree = run_tree()
+    xi_panel = run_panel(fresh_panel())
+    assert abs(xi_tree - xi_panel) <= 1e-4 * max(abs(xi_tree), 1.0), (
+        xi_tree, xi_panel)
+
+    t_tree = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        run_tree()
+        t_tree.append(time.perf_counter() - t0)
+    t_panel = []
+    for _ in range(reps):
+        pan = fresh_panel()
+        t0 = time.perf_counter()
+        run_panel(pan)
+        t_panel.append(time.perf_counter() - t0)
+
+    us_tree = min(t_tree) / rounds * 1e6
+    us_panel = min(t_panel) / rounds * 1e6
+    return {"m": m, "leaves": len(jax.tree.leaves(tree)),
+            "D": spec.width, "rounds": rounds,
+            "us_per_round_tree": round(us_tree, 1),
+            "us_per_round_panel": round(us_panel, 1),
+            "speedup": round(us_tree / us_panel, 2),
+            "xi_parity_gap": round(abs(xi_tree - xi_panel), 6)}
+
+
+def main():
+    out = {"backend": jax.default_backend(),
+           "description": "fused panel gossip+merge round vs per-leaf "
+                          "tree-map path (us_per_round)",
+           "sizes": {}}
+    for name, kw in SIZES.items():
+        out["sizes"][name] = bench_size(**kw)
+        r = out["sizes"][name]
+        print(f"{name}: tree={r['us_per_round_tree']:.0f}us "
+              f"panel={r['us_per_round_panel']:.0f}us "
+              f"speedup={r['speedup']}x", flush=True)
+    with open("BENCH_panel.json", "w") as f:
+        json.dump(out, f, indent=1)
+    print("wrote BENCH_panel.json")
+
+
+if __name__ == "__main__":
+    main()

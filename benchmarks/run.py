@@ -22,6 +22,7 @@ BENCHES = [
     ("beyond_adaptive_schedule", figures.beyond_adaptive_schedule),
     ("beyond_bf16_gossip", figures.beyond_bf16_gossip),
     ("kernels_microbench", figures.kernels_microbench),
+    ("panel_microbench", figures.panel_microbench),
 ]
 
 

@@ -1,6 +1,9 @@
 """The paper's contribution: temporal communication allocation + single
 global merging for decentralized learning, as a composable JAX layer."""
-from repro.core import consensus, gossip, merge, schedule, topology  # noqa: F401
-from repro.core.dsgd import (init_parallel_state, init_state,  # noqa: F401
-                             make_dsgd_round, make_dsgd_step,
-                             make_parallel_step)
+from repro.core import (consensus, gossip, merge, panel,  # noqa: F401
+                        schedule, topology)
+from repro.core.dsgd import (init_panel_state, init_parallel_state,  # noqa: F401
+                             init_state, make_dsgd_round, make_dsgd_step,
+                             make_panel_segment, make_parallel_step,
+                             panelize_state, unpanelize_state)
+from repro.core.panel import PanelSpec, make_spec  # noqa: F401

@@ -13,11 +13,21 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import panel as panel_mod
 from repro.core.gossip import merged_model
 
 
 def consensus_distance(params_stacked) -> jnp.ndarray:
-    """Xi_t over an agent-stacked pytree (leaves (m, ...))."""
+    """Xi_t over an agent-stacked pytree (leaves (m, ...)). Backed by the
+    flat-panel engine: one fused mean+deviation reduction per dtype group
+    instead of a Python loop over leaves."""
+    spec = panel_mod.make_spec(params_stacked)
+    return panel_mod.consensus_distance(
+        panel_mod.to_panel(params_stacked, spec))
+
+
+def consensus_distance_tree(params_stacked) -> jnp.ndarray:
+    """Per-leaf reference implementation (pre-panel path)."""
     total = 0.0
     m = None
     for x in jax.tree.leaves(params_stacked):

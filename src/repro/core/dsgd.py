@@ -1,7 +1,24 @@
 """Decentralized training engine (Algorithm 1 of the paper).
 
-State is agent-stacked: every leaf of params/opt_state carries a leading
-(m,) agent axis (sharded over ('pod','agent') on the production mesh).
+Two state layouts:
+
+* **Tree state** (:func:`init_state` + :func:`make_dsgd_step` /
+  :func:`make_dsgd_round`) — every leaf of params/opt_state carries a
+  leading (m,) agent axis (sharded over ('pod','agent') on the production
+  mesh). Mixing is per-leaf (``gossip.*_tree``): the right lowering when
+  leaves carry heterogeneous shardings (launch/dryrun.py), and the
+  reference baseline for the panel engine.
+
+* **Panel state** (:func:`init_panel_state` + :func:`make_panel_segment`)
+  — params and optimizer moments live as persistent per-dtype (m, D)
+  panels (core/panel.py). The segment driver scans a whole SCHEDULE
+  SEGMENT of rounds on device (mixing matrices precomputed and stacked),
+  donates the state buffers (in-place update, no per-round host
+  dispatch), mixes with ONE fused matmul per dtype group, and returns
+  per-round metrics as stacked arrays — a single device_get per segment.
+  This is the hot path used by launch/train.py and benchmarked in
+  benchmarks/panel_bench.py.
+
 One round = per-agent local step(s) (vmapped grad + optimizer; zero
 cross-agent traffic) followed by gossip mixing with the scheduler's W^(t).
 
@@ -16,33 +33,43 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import gossip
-from repro.core.consensus import consensus_distance
+from repro.core import panel as panel_mod
+from repro.core.consensus import consensus_distance_tree
 from repro.optim.optim import Optimizer
+
+
+def _init_agent_params(init_params: Callable, m: int, rng,
+                       same_init: bool):
+    """``same_init=True`` matches the theory (theta_k^0 = theta^0); False
+    matches the paper's main experiments (independent inits — the harder
+    cross-initialization merge)."""
+    if same_init:
+        p = init_params(rng)
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (m,) + x.shape), p)
+    return jax.vmap(init_params)(jax.random.split(rng, m))
 
 
 def init_state(init_params: Callable, optimizer: Optimizer, m: int, rng,
                same_init: bool = False):
-    """Agent-stacked train state. ``same_init=True`` matches the theory
-    (theta_k^0 = theta^0); False matches the paper's main experiments
-    (independent inits — the harder cross-initialization merge)."""
-    if same_init:
-        p = init_params(rng)
-        params = jax.tree.map(
-            lambda x: jnp.broadcast_to(x[None], (m,) + x.shape), p)
-    else:
-        params = jax.vmap(init_params)(jax.random.split(rng, m))
+    """Agent-stacked train state (see _init_agent_params for same_init)."""
+    params = _init_agent_params(init_params, m, rng, same_init)
     opt_state = jax.vmap(optimizer.init)(params)
     return {"params": params, "opt": opt_state,
             "step": jnp.zeros((), jnp.int32)}
 
 
-def _mix(params, W, impl: str, wire_dtype, partner=None):
+def _mix(params, W, impl: str, wire_dtype):
+    # Per-leaf mixing: tree-state steps are the sharding-aware reference
+    # path (see module docstring); the fused panel path is make_panel_segment.
+    # For impl == "pairwise" the step's W argument IS the (m,) int32
+    # partner array (see topology.partner_array), not an (m, m) matrix.
     if impl == "dense":
-        return gossip.mix_dense(params, W, wire_dtype)
+        return gossip.mix_dense_tree(params, W, wire_dtype)
     if impl == "pairwise":
-        return gossip.mix_pairwise(params, partner, wire_dtype=wire_dtype)
+        return gossip.mix_pairwise_tree(params, W, wire_dtype=wire_dtype)
     if impl == "merge":
-        return gossip.global_merge(params, wire_dtype)
+        return gossip.global_merge_tree(params, wire_dtype)
     if impl == "none":
         return params
     raise ValueError(impl)
@@ -54,6 +81,7 @@ def make_dsgd_step(loss_fn: Callable, optimizer: Optimizer, *,
     """One communication round with ONE local step per agent.
 
     step(state, batch, W, rng) -> (state, metrics); batch leaves (m, b, ...).
+    With gossip_impl="pairwise", pass the (m,) int32 partner array as W.
     """
 
     def step(state, batch, W, rng):
@@ -73,7 +101,7 @@ def make_dsgd_step(loss_fn: Callable, optimizer: Optimizer, *,
             gbar = jax.tree.map(lambda g: jnp.mean(g, axis=0), grads)
             metrics["grad_norm"] = jnp.sqrt(sum(
                 jnp.sum(jnp.square(x)) for x in jax.tree.leaves(gbar)))
-            metrics["consensus"] = consensus_distance(mixed)
+            metrics["consensus"] = consensus_distance_tree(mixed)
         return {"params": mixed, "opt": new_opt,
                 "step": state["step"] + 1}, metrics
 
@@ -114,11 +142,144 @@ def make_dsgd_round(loss_fn: Callable, optimizer: Optimizer, local_steps: int,
         mixed = _mix(p, W, gossip_impl, wire_dtype)
         metrics = {"loss": jnp.mean(losses), "grad_norm": gns[-1]}
         if monitor:
-            metrics["consensus"] = consensus_distance(mixed)
+            metrics["consensus"] = consensus_distance_tree(mixed)
         return {"params": mixed, "opt": o,
                 "step": state["step"] + local_steps}, metrics
 
     return round_fn
+
+
+# ---------------------------------------------------------------------------
+# Flat-panel engine: persistent (m, D) state, donated + scanned rounds.
+# ---------------------------------------------------------------------------
+
+# Optimizer-state entries that are parameter-shaped moment trees (AdamW m/v,
+# SGD momentum mu); everything else (step_count) passes through unchanged.
+_MOMENT_KEYS = ("m", "v", "mu")
+
+
+def init_panel_state(init_params: Callable, optimizer: Optimizer, m: int,
+                     rng, same_init: bool = False):
+    """Panel train state: params AND optimizer moments as per-dtype (m, D)
+    panels. Returns (state, spec); the static spec is what turns panels
+    back into model pytrees. The optimizer transforms are elementwise, so
+    they run directly on the panel leaves — no per-leaf dispatch."""
+    params = _init_agent_params(init_params, m, rng, same_init)
+    spec = panel_mod.make_spec(params)
+    pan = panel_mod.to_panel(params, spec)
+    opt_state = jax.vmap(optimizer.init)(pan)
+    return {"panel": pan, "opt": opt_state,
+            "step": jnp.zeros((), jnp.int32)}, spec
+
+
+def panelize_state(state, spec):
+    """Tree state (init_state) -> panel state (same numbers)."""
+    opt = {k: (panel_mod.to_panel(v, spec) if k in _MOMENT_KEYS else v)
+           for k, v in state["opt"].items()}
+    return {"panel": panel_mod.to_panel(state["params"], spec), "opt": opt,
+            "step": state["step"]}
+
+
+def unpanelize_state(state, spec):
+    """Panel state -> tree state (same numbers)."""
+    opt = {k: (panel_mod.from_panel(v, spec) if k in _MOMENT_KEYS else v)
+           for k, v in state["opt"].items()}
+    return {"params": panel_mod.from_panel(state["panel"], spec), "opt": opt,
+            "step": state["step"]}
+
+
+def make_panel_segment(loss_fn: Callable, optimizer: Optimizer,
+                       local_steps: int, spec, *, wire_dtype=None,
+                       monitor: bool = True, use_pallas: bool = False,
+                       interpret: bool = True, donate: bool = True):
+    """Donated, scanned panel driver: one dispatch per SCHEDULE SEGMENT.
+
+    segment(state, batches, Ws, rng, active=None) -> (state, metrics) with
+      batches leaves (S, H, m, b, ...)  — H DISTINCT batches per round,
+      Ws (S, m, m)                      — precomputed mixing matrices,
+      active (S,) bool or None          — padding mask (see below),
+      metrics dict of (S,) arrays      — one device_get per segment.
+
+    ``jax.lax.scan`` runs the S rounds (each an inner scan over the H
+    local steps) entirely on device; ``donate_argnums=(0,)`` lets XLA
+    update the panel state in place instead of copying the full
+    agent-stacked state every round. The dense-W fused matmul covers every
+    scheduler (W=I for idle rounds, fully-connected for merge rounds), so
+    a segment needs no host-side dispatch on the round kind.
+
+    ``active`` lets the host pad a PARTIAL tail segment up to the common
+    segment length instead of retracing/recompiling the whole scan for a
+    one-off smaller S: rounds with ``active[s] == False`` are full no-ops
+    (state passes through untouched, metrics report 0) and their
+    Ws/batches entries are ignored."""
+
+    def one(p, b, r):
+        (l, aux), g = jax.value_and_grad(loss_fn, has_aux=True)(p, b, r)
+        return g, l
+
+    def segment(state, batches, Ws, rng, active=None):
+        m = next(iter(state["panel"].values())).shape[0]
+        S = Ws.shape[0]
+
+        def local_body(carry, xs):
+            pan, opt = carry
+            batch, r = xs
+            rngs = jax.random.split(r, m)
+            params = panel_mod.from_panel(pan, spec)
+            grads, losses = jax.vmap(one)(params, batch, rngs)
+            gpan = panel_mod.to_panel(grads, spec)
+            new_pan, new_opt = jax.vmap(optimizer.update)(gpan, opt, pan)
+            gn = panel_mod.panel_norm(gpan, axis_mean=True)
+            return (new_pan, new_opt), (jnp.mean(losses), gn)
+
+        def run_round(carry, W, batch_r, r):
+            pan, opt = carry
+            rs = jax.random.split(r, local_steps)
+            (pan, opt), (losses, gns) = jax.lax.scan(
+                local_body, (pan, opt), (batch_r, rs))
+            # W == I rounds communicate nothing: skip the matmul AND the
+            # wire cast (a bf16 wire must not quantize idle rounds —
+            # there is no payload on the wire to compress)
+            idle = jnp.all(W == jnp.eye(m, dtype=W.dtype))
+            mixed = jax.lax.cond(
+                idle, lambda p: p,
+                lambda p: panel_mod.mix_dense(p, W, wire_dtype=wire_dtype,
+                                              use_pallas=use_pallas,
+                                              interpret=interpret),
+                pan)
+            mets = {"loss": jnp.mean(losses), "grad_norm": gns[-1]}
+            if monitor:
+                mets["consensus"] = panel_mod.consensus_distance(
+                    mixed, use_pallas=use_pallas, interpret=interpret)
+            return (mixed, opt), mets
+
+        def round_body(carry, xs):
+            if active is None:
+                W, batch_r, r = xs
+                return run_round(carry, W, batch_r, r)
+            W, batch_r, r, act = xs
+
+            def inactive(c):
+                # zeros matching run_round's metric schema exactly
+                mets_sds = jax.eval_shape(
+                    lambda cc: run_round(cc, W, batch_r, r)[1], c)
+                return c, jax.tree.map(
+                    lambda s: jnp.zeros(s.shape, s.dtype), mets_sds)
+
+            return jax.lax.cond(
+                act, lambda c: run_round(c, W, batch_r, r), inactive, carry)
+
+        rngs = jax.random.split(rng, S)
+        xs = ((Ws, batches, rngs) if active is None
+              else (Ws, batches, rngs, active))
+        (pan, opt), metrics = jax.lax.scan(
+            round_body, (state["panel"], state["opt"]), xs)
+        steps = (S if active is None
+                 else jnp.sum(active.astype(jnp.int32))) * local_steps
+        return ({"panel": pan, "opt": opt,
+                 "step": state["step"] + steps}, metrics)
+
+    return jax.jit(segment, donate_argnums=(0,) if donate else ())
 
 
 def make_parallel_step(loss_fn: Callable, optimizer: Optimizer):

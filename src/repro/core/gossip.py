@@ -1,12 +1,14 @@
 """Gossip mixing of agent-stacked parameter pytrees.
 
 Every leaf of an agent-stacked pytree has shape (m, ...) with the leading
-axis sharded over the ('pod','agent') mesh axes. Three mixing paths:
+axis sharded over the ('pod','agent') mesh axes. The public functions are
+backed by the flat-panel engine (core/panel.py): the pytree is flattened
+into per-dtype (m, D) panels and each mixing form lowers to ONE fused op
+per dtype group instead of one op per leaf:
 
 * :func:`mix_dense` — the paper-faithful general mixing-matrix form
-  Theta <- Theta W, one ``tensordot`` per leaf. XLA SPMD lowers the
-  contraction over the sharded agent axis to an all-gather (O(m P) wire
-  bytes). Works for ANY doubly-stochastic W, including W=I.
+  Theta <- Theta W: a single (m,m)x(m,D) matmul with f32 accumulation.
+  Works for ANY doubly-stochastic W, including W=I.
 * :func:`mix_pairwise` — optimized path for (partial) matchings:
   theta_k <- (1-w) theta_k + w theta_{partner[k]} — one gather along the
   agent axis (O(P) bytes, lowered to collective-permute/all-to-all).
@@ -16,6 +18,11 @@ axis sharded over the ('pod','agent') mesh axes. Three mixing paths:
 
 ``wire_dtype`` optionally casts parameters to bf16 for the communication
 only (beyond-paper compression lever; see EXPERIMENTS.md §Perf).
+
+The per-leaf originals survive as ``*_tree``: they are the reference the
+panel path is validated/benchmarked against, and the right lowering when
+leaves carry heterogeneous shardings (the launch/dryrun.py pod meshes,
+where concatenating differently-sharded leaves would force resharding).
 """
 from __future__ import annotations
 
@@ -25,15 +32,51 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core import panel as panel_mod
+from repro.core.panel import _wire  # shared wire-cast helper
 
-def _wire(x, wire_dtype):
-    if wire_dtype is None or x.dtype == wire_dtype:
-        return x, lambda y: y
-    return x.astype(wire_dtype), lambda y: y.astype(x.dtype)
+
+def _via_panel(op, params):
+    spec = panel_mod.make_spec(params)
+    return panel_mod.from_panel(op(panel_mod.to_panel(params, spec)), spec)
 
 
 def mix_dense(params, W, wire_dtype=None):
-    """Theta <- W Theta  (row k: sum_l W[k,l] theta_l)."""
+    """Theta <- W Theta  (row k: sum_l W[k,l] theta_l) — one fused matmul
+    per dtype group over the flattened panel."""
+    return _via_panel(
+        lambda p: panel_mod.mix_dense(p, W, wire_dtype=wire_dtype), params)
+
+
+def mix_pairwise(params, partner, weight=0.5, wire_dtype=None):
+    """theta_k <- (1-w) theta_k + w theta_{partner[k]}; partner: (m,) int32.
+
+    partner[k] == k means agent k idles this round (no communication)."""
+    return _via_panel(
+        lambda p: panel_mod.mix_pairwise(p, partner, weight,
+                                         wire_dtype=wire_dtype), params)
+
+
+def global_merge(params, wire_dtype=None):
+    """Single global merging: theta_k <- mean_l theta_l for every k."""
+    return _via_panel(
+        lambda p: panel_mod.global_merge(p, wire_dtype=wire_dtype), params)
+
+
+def merged_model(params):
+    """The (counterfactual) globally averaged model: drops the agent axis.
+    One fused mean-reduce per dtype group; leaves come back f32."""
+    spec = panel_mod.make_spec(params)
+    return panel_mod.merged_tree(panel_mod.to_panel(params, spec), spec)
+
+
+# ---------------------------------------------------------------------------
+# Per-leaf tree-map reference path (pre-panel implementation).
+# ---------------------------------------------------------------------------
+
+
+def mix_dense_tree(params, W, wire_dtype=None):
+    """Per-leaf Theta <- W Theta: one tensordot per pytree leaf."""
     def leaf(x):
         xw, back = _wire(x, wire_dtype)
         y = jnp.tensordot(W.astype(xw.dtype), xw, axes=1)
@@ -41,10 +84,8 @@ def mix_dense(params, W, wire_dtype=None):
     return jax.tree.map(leaf, params)
 
 
-def mix_pairwise(params, partner, weight=0.5, wire_dtype=None):
-    """theta_k <- (1-w) theta_k + w theta_{partner[k]}; partner: (m,) int32.
-
-    partner[k] == k means agent k idles this round (no communication)."""
+def mix_pairwise_tree(params, partner, weight=0.5, wire_dtype=None):
+    """Per-leaf pairwise exchange: one gather per pytree leaf."""
     def leaf(x):
         xw, back = _wire(x, wire_dtype)
         peer = jnp.take(xw, partner, axis=0)
@@ -52,8 +93,8 @@ def mix_pairwise(params, partner, weight=0.5, wire_dtype=None):
     return jax.tree.map(leaf, params)
 
 
-def global_merge(params, wire_dtype=None):
-    """Single global merging: theta_k <- mean_l theta_l for every k."""
+def global_merge_tree(params, wire_dtype=None):
+    """Per-leaf global merging: one mean-reduce per pytree leaf."""
     def leaf(x):
         xw, back = _wire(x, wire_dtype)
         mean = jnp.mean(xw.astype(jnp.float32), axis=0, keepdims=True)
@@ -61,8 +102,8 @@ def global_merge(params, wire_dtype=None):
     return jax.tree.map(leaf, params)
 
 
-def merged_model(params):
-    """The (counterfactual) globally averaged model: drops the agent axis."""
+def merged_model_tree(params):
+    """Per-leaf averaged model (f32 leaves, agent axis dropped)."""
     return jax.tree.map(lambda x: jnp.mean(x.astype(jnp.float32), axis=0),
                         params)
 

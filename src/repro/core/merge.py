@@ -27,10 +27,12 @@ def counterfactual_eval(eval_fn, params_stacked):
 
 def gossip_merge_rounds(params_stacked, sampler, rounds: int, rng):
     """Approximate the final global merging by multiple rounds of gossip on
-    a (e.g. exponential) topology — paper Appendix C.3.4."""
-    from repro.core.gossip import mix_dense
-    p = params_stacked
+    a (e.g. exponential) topology — paper Appendix C.3.4. Panelises once,
+    mixes all rounds on the panel, unpanelises once."""
+    from repro.core import panel as panel_mod
+    spec = panel_mod.make_spec(params_stacked)
+    pan = panel_mod.to_panel(params_stacked, spec)
     for t in range(rounds):
         W = sampler(t, rng)
-        p = mix_dense(p, jnp.asarray(W, jnp.float32))
-    return p
+        pan = panel_mod.mix_dense(pan, jnp.asarray(W, jnp.float32))
+    return panel_mod.from_panel(pan, spec)

@@ -1,0 +1,205 @@
+"""Flat-panel parameter engine: the fused communication layer.
+
+Agent-stacked pytrees (every leaf (m, ...)) are flattened ONCE into a
+*panel*: a dict ``{dtype_name: (m, D_dtype) array}`` — one row per agent,
+one column per scalar parameter — described by a static :class:`PanelSpec`
+(per-leaf offsets/shapes/dtypes). Grouping by dtype preserves every leaf's
+storage dtype exactly (``jnp.concatenate`` over mixed-dtype leaves would
+silently promote bf16 to f32 and double the wire bytes).
+
+All communication primitives then become ONE fused op per dtype group over
+the panel instead of one op per pytree leaf:
+
+* :func:`mix_dense`       — Theta <- W Theta, a single (m,m)x(m,D) matmul
+                            with f32 accumulation (Pallas ``gossip_mix``
+                            kernel when ``use_pallas=True``).
+* :func:`mix_pairwise`    — one gather + lerp along the agent axis.
+* :func:`global_merge`    — one mean-reduce broadcast back to all rows.
+* :func:`merged`          — the averaged model as a (D,) panel.
+* :func:`consensus_distance` — Xi_t in one pass (Pallas ``panel_reduce``
+                            kernel when ``use_pallas=True``).
+
+``wire_dtype`` casts a group's payload for the communication only (the
+beyond-paper bf16-wire compression lever). The per-leaf tree-map originals
+survive in core/gossip.py as ``*_tree`` — they remain the right lowering
+when leaves carry heterogeneous shardings (launch/dryrun.py pod meshes),
+and they are the baseline the panel path is benchmarked against
+(benchmarks/panel_bench.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.gossip_mix import gossip_mix_panel
+from repro.kernels.panel_reduce import panel_mean_consensus
+
+
+@dataclass(frozen=True)
+class LeafSpec:
+    group: str            # dtype-group key ('float32', 'bfloat16', ...)
+    offset: int           # column offset inside the group panel
+    size: int             # number of scalars per agent
+    shape: Tuple[int, ...]  # per-agent (trailing) shape
+    dtype: str            # leaf storage dtype name
+
+
+@dataclass(frozen=True)
+class PanelSpec:
+    """Static description of a panelised pytree. Hashable — safe to close
+    over in jitted functions or pass as a static argument."""
+    treedef: object
+    leaves: Tuple[LeafSpec, ...]
+    groups: Tuple[Tuple[str, int], ...]  # (dtype key, group width D_g)
+
+    @property
+    def width(self) -> int:
+        """Total scalars per agent across all dtype groups."""
+        return sum(w for _, w in self.groups)
+
+    @property
+    def wire_bytes(self) -> int:
+        """Per-agent payload bytes of one full-panel exchange."""
+        return sum(w * jnp.dtype(k).itemsize for k, w in self.groups)
+
+
+def make_spec(tree) -> PanelSpec:
+    """Build the static spec for an agent-stacked pytree (leaves (m, ...))."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    offsets: dict = {}
+    specs = []
+    for x in leaves:
+        key = jnp.dtype(x.dtype).name
+        off = offsets.get(key, 0)
+        size = int(np.prod(x.shape[1:], dtype=np.int64))
+        specs.append(LeafSpec(group=key, offset=off, size=size,
+                              shape=tuple(x.shape[1:]), dtype=key))
+        offsets[key] = off + size
+    groups = tuple(sorted(offsets.items()))
+    return PanelSpec(treedef=treedef, leaves=tuple(specs), groups=groups)
+
+
+def to_panel(tree, spec: PanelSpec):
+    """Flatten an agent-stacked pytree into {dtype: (m, D_dtype)} panels."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    m = leaves[0].shape[0]
+    parts: dict = {}
+    for x, ls in zip(leaves, spec.leaves):
+        parts.setdefault(ls.group, []).append(x.reshape(m, ls.size))
+    return {k: (fl[0] if len(fl) == 1 else jnp.concatenate(fl, axis=1))
+            for k, fl in parts.items()}
+
+
+def from_panel(panel, spec: PanelSpec, cast: bool = True):
+    """Rebuild the pytree from panels. Accepts (m, D) panels (stacked tree)
+    or (D,) panels (a merged model — leaves drop the agent axis).
+    ``cast=False`` keeps the panel dtype (e.g. the f32 merged model)."""
+    outs = []
+    for ls in spec.leaves:
+        g = panel[ls.group]
+        if g.ndim == 2:
+            x = g[:, ls.offset:ls.offset + ls.size]
+            x = x.reshape((g.shape[0],) + ls.shape)
+        else:
+            x = g[ls.offset:ls.offset + ls.size].reshape(ls.shape)
+        outs.append(x.astype(ls.dtype) if cast else x)
+    return jax.tree_util.tree_unflatten(spec.treedef, outs)
+
+
+# ------------------------------------------------------------ fused ops
+
+
+def _wire(x, wire_dtype):
+    if wire_dtype is None or x.dtype == wire_dtype:
+        return x, lambda y: y
+    return x.astype(wire_dtype), lambda y: y.astype(x.dtype)
+
+
+def mix_dense(panel, W, *, wire_dtype=None, use_pallas: bool = False,
+              block_d: int = 512, interpret: bool = True):
+    """Theta <- W Theta: one f32-accumulating matmul per dtype group."""
+    W32 = W.astype(jnp.float32)
+
+    def one(x):
+        xw, back = _wire(x, wire_dtype)
+        if use_pallas:
+            y = gossip_mix_panel(W32, xw, block_d=block_d,
+                                 interpret=interpret)
+        else:
+            y = (W32 @ xw.astype(jnp.float32)).astype(xw.dtype)
+        return back(y)
+
+    return {k: one(x) for k, x in panel.items()}
+
+
+def mix_pairwise(panel, partner, weight=0.5, *, wire_dtype=None):
+    """theta_k <- (1-w) theta_k + w theta_{partner[k]}: one gather + lerp
+    per dtype group. partner[k] == k means agent k idles this round."""
+    def one(x):
+        xw, back = _wire(x, wire_dtype)
+        peer = jnp.take(xw, partner, axis=0)
+        return back((1.0 - weight) * xw + weight * peer)
+
+    return {k: one(x) for k, x in panel.items()}
+
+
+def global_merge(panel, *, wire_dtype=None):
+    """theta_k <- mean_l theta_l: one mean-reduce + broadcast per group."""
+    def one(x):
+        xw, back = _wire(x, wire_dtype)
+        mean = jnp.mean(xw.astype(jnp.float32), axis=0, keepdims=True)
+        return back(jnp.broadcast_to(mean, xw.shape).astype(xw.dtype))
+
+    return {k: one(x) for k, x in panel.items()}
+
+
+def merged(panel, *, use_pallas: bool = False, block_d: int = 512,
+           interpret: bool = True):
+    """The (counterfactual) averaged model as {dtype: (D_dtype,)} f32."""
+    if use_pallas:
+        return {k: panel_mean_consensus(x, block_d=block_d,
+                                        interpret=interpret)[0]
+                for k, x in panel.items()}
+    return {k: jnp.mean(x.astype(jnp.float32), axis=0)
+            for k, x in panel.items()}
+
+
+def merged_tree(panel, spec: PanelSpec):
+    """Averaged model as a (non-stacked) pytree with f32 leaves — the panel
+    equivalent of gossip.merged_model."""
+    return from_panel(merged(panel), spec, cast=False)
+
+
+def consensus_distance(panel, *, use_pallas: bool = False,
+                       block_d: int = 512, interpret: bool = True):
+    """Xi_t = sqrt((1/m) sum_k ||theta_k - bar||^2) in one fused pass."""
+    m = next(iter(panel.values())).shape[0]
+    total = jnp.zeros((), jnp.float32)
+    for x in panel.values():
+        if use_pallas:
+            _, sq = panel_mean_consensus(x, block_d=block_d,
+                                         interpret=interpret)
+        else:
+            x32 = x.astype(jnp.float32)
+            mean = jnp.mean(x32, axis=0, keepdims=True)
+            sq = jnp.sum(jnp.square(x32 - mean))
+        total = total + sq
+    return jnp.sqrt(total / m)
+
+
+def panel_norm(panel, axis_mean: bool = False):
+    """Global l2 norm of the panel (f32). With ``axis_mean`` the rows are
+    averaged first (norm of the agent-mean, e.g. for grad-norm metrics)."""
+    total = jnp.zeros((), jnp.float32)
+    for x in panel.values():
+        x32 = x.astype(jnp.float32)
+        if axis_mean:
+            x32 = jnp.mean(x32, axis=0)
+        total = total + jnp.sum(jnp.square(x32))
+    return jnp.sqrt(total)
+
+

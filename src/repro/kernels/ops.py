@@ -14,7 +14,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.flash_attention import flash_attention_bh
-from repro.kernels.gossip_mix import gossip_mix_panel
 
 
 @partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k",
@@ -39,27 +38,39 @@ def flash_attention(q, k, v, *, causal=True, window=None, block_q=128,
     return out.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
 
 
-def _flatten_panel(tree):
-    leaves = jax.tree.leaves(tree)
-    m = leaves[0].shape[0]
-    flats = [x.reshape(m, -1) for x in leaves]
-    sizes = [f.shape[1] for f in flats]
-    return jnp.concatenate(flats, axis=1), sizes
+@partial(jax.jit, static_argnames=("block_d", "interpret"))
+def gossip_mix(W, params_stacked, *, block_d=512, interpret=True):
+    """Kernel-backed Theta <- W Theta over an agent-stacked pytree.
 
-
-def _unflatten_panel(panel, tree, sizes):
-    leaves, treedef = jax.tree_util.tree_flatten(tree)
-    outs = []
-    off = 0
-    for leaf, sz in zip(leaves, sizes):
-        outs.append(panel[:, off:off + sz].reshape(leaf.shape).astype(leaf.dtype))
-        off += sz
-    return jax.tree_util.tree_unflatten(treedef, outs)
+    Flattening goes through the PanelSpec engine (core/panel.py): leaves are
+    grouped by dtype, so a bf16+f32 pytree mixes as one kernel call per
+    dtype group with NO silent promotion (the old ``jnp.concatenate`` over
+    all leaves upcast everything to the widest dtype, doubling wire bytes).
+    """
+    from repro.core import panel as panel_mod
+    spec = panel_mod.make_spec(params_stacked)
+    panel = panel_mod.to_panel(params_stacked, spec)
+    mixed = panel_mod.mix_dense(panel, W, use_pallas=True, block_d=block_d,
+                                interpret=interpret)
+    return panel_mod.from_panel(mixed, spec)
 
 
 @partial(jax.jit, static_argnames=("block_d", "interpret"))
-def gossip_mix(W, params_stacked, *, block_d=512, interpret=True):
-    """Kernel-backed Theta <- W Theta over an agent-stacked pytree."""
-    panel, sizes = _flatten_panel(params_stacked)
-    mixed = gossip_mix_panel(W, panel, block_d=block_d, interpret=interpret)
-    return _unflatten_panel(mixed, params_stacked, sizes)
+def panel_stats(params_stacked, *, block_d=512, interpret=True):
+    """Kernel-backed fused panel statistics over an agent-stacked pytree:
+    (merged f32 pytree, consensus distance Xi). One panel_reduce kernel
+    call per dtype group — single pass over the parameters."""
+    from repro.core import panel as panel_mod
+    from repro.kernels.panel_reduce import panel_mean_consensus
+    spec = panel_mod.make_spec(params_stacked)
+    panel = panel_mod.to_panel(params_stacked, spec)
+    m = next(iter(panel.values())).shape[0]
+    means = {}
+    total = jnp.zeros((), jnp.float32)
+    for k, x in panel.items():
+        mean, sq = panel_mean_consensus(x, block_d=block_d,
+                                        interpret=interpret)
+        means[k] = mean
+        total = total + sq
+    merged = panel_mod.from_panel(means, spec, cast=False)
+    return merged, jnp.sqrt(total / m)

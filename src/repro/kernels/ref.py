@@ -29,3 +29,14 @@ def attention_ref(q, k, v, *, causal: bool = True, window=None,
 def gossip_mix_ref(W, theta):
     """W: (m, m); theta: (m, D) -> W @ theta in f32 accumulation."""
     return (W.astype(jnp.float32) @ theta.astype(jnp.float32)).astype(theta.dtype)
+
+
+def panel_mean_consensus_ref(theta):
+    """theta: (m, D) -> (column mean (D,) f32, total squared deviation).
+
+    Oracle for kernels/panel_reduce.py: mean_j = (1/m) sum_k theta_kj and
+    sq = sum_{k,j} (theta_kj - mean_j)^2 (= m * Xi^2)."""
+    t = theta.astype(jnp.float32)
+    mean = jnp.mean(t, axis=0)
+    sq = jnp.sum(jnp.square(t - mean[None]))
+    return mean, sq

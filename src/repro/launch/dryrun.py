@@ -121,12 +121,14 @@ def build_train(cfg, shape, multi_pod, variant, scan=False):
 
     if impl == "pairwise":
         def step(state, batch, partner, rng):
-            from repro.core.gossip import mix_pairwise
+            # per-leaf variant: leaves carry heterogeneous shardings here,
+            # so the panel path's concatenate would force resharding
+            from repro.core.gossip import mix_pairwise_tree
             s = dsgd.make_dsgd_step(model.loss_fn, opt, gossip_impl="none",
                                     monitor=False)
             new_state, mets = s(state, batch, None, rng)
-            new_state["params"] = mix_pairwise(new_state["params"], partner,
-                                               wire_dtype=wire)
+            new_state["params"] = mix_pairwise_tree(
+                new_state["params"], partner, wire_dtype=wire)
             return new_state, mets
         w_sds = jax.ShapeDtypeStruct((m,), jnp.int32)
     else:

@@ -1,10 +1,16 @@
-"""Decentralized LM training launcher.
+"""Decentralized LM training launcher (flat-panel engine).
 
 Runs the paper's algorithm end-to-end on real data (synthetic non-IID token
 streams): per-agent local AdamW/SGD steps + scheduled gossip communication +
-(optionally) the single final global merging. On this CPU container use
-``--preset cpu`` (tiny model, 1-device mesh); on a pod the same script drives
-the production mesh.
+(optionally) the single final global merging. The training state lives as a
+persistent (m, D) parameter panel (core/panel.py); the host loop dispatches
+ONE donated, scanned computation per schedule *segment* (``--segment``
+rounds) with the segment's mixing matrices precomputed and stacked, H
+DISTINCT batches per round (Algorithm 1's local SGD), on-device metric
+accumulation, and a single device_get per segment.
+
+On this CPU container use ``--preset cpu`` (tiny model, 1-device mesh); on a
+pod the same script drives the production mesh.
 
 Examples:
   PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --preset cpu \
@@ -25,7 +31,7 @@ import numpy as np
 from repro.checkpoint import save
 from repro.configs import get_config
 from repro.core import dsgd
-from repro.core.gossip import merged_model
+from repro.core import panel as panel_mod
 from repro.core.schedule import make_schedule
 from repro.data.synthetic import SyntheticLM, make_agent_lm_batches
 from repro.models import build_model
@@ -39,6 +45,20 @@ def build_cpu_preset(cfg, agents):
     return cfg
 
 
+def sample_segment_batches(lm, mixtures, rounds, local_steps, batch, seq,
+                           rng_np):
+    """(S, H, m, b, seq) batches: H DISTINCT batches per round, so every
+    local step sees fresh data (Algorithm 1's local SGD; the old driver
+    repeated one batch H times)."""
+    per_round = []
+    for _ in range(rounds):
+        hs = [make_agent_lm_batches(lm, mixtures, batch, seq, rng_np)
+              for _ in range(local_steps)]
+        per_round.append({k: np.stack([h[k] for h in hs]) for k in hs[0]})
+    return {k: jnp.asarray(np.stack([r[k] for r in per_round]))
+            for k in per_round[0]}
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="olmo-1b")
@@ -48,6 +68,9 @@ def main():
     ap.add_argument("--local-steps", type=int, default=4)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--segment", type=int, default=8,
+                    help="rounds per donated scanned dispatch (adaptive "
+                         "schedule forces 1: it needs per-round feedback)")
     ap.add_argument("--schedule", default="final_merge",
                     choices=["constant", "local", "windowed", "final_merge",
                              "periodic", "adaptive"])
@@ -57,6 +80,8 @@ def main():
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--alpha", type=float, default=0.1,
                     help="Dirichlet heterogeneity")
+    ap.add_argument("--wire", default="f32", choices=["f32", "bf16"],
+                    help="gossip payload dtype (bf16 halves wire bytes)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="results/train")
     ap.add_argument("--save-merged", default="")
@@ -71,7 +96,11 @@ def main():
                          total_steps=args.rounds * args.local_steps)
 
     key = jax.random.PRNGKey(args.seed)
-    state = dsgd.init_state(model.init_params, opt, m, key)
+    state, spec = dsgd.init_panel_state(model.init_params, opt, m, key)
+    wire = jnp.bfloat16 if args.wire == "bf16" else None
+    segment_fn = dsgd.make_panel_segment(model.loss_fn, opt,
+                                         args.local_steps, spec,
+                                         wire_dtype=wire)
 
     lm = SyntheticLM(vocab=cfg.vocab_size, num_domains=8, seed=args.seed)
     mixtures = lm.domain_mixtures(m, args.alpha, seed=args.seed + 1)
@@ -82,16 +111,17 @@ def main():
         kw.update(start=args.window_start, end=args.window_end or
                   args.rounds // 10)
     sched = make_schedule(args.schedule, m, args.rounds, **kw)
-
-    round_fn = jax.jit(dsgd.make_dsgd_round(model.loss_fn, opt,
-                                            args.local_steps))
+    seg_len = 1 if args.schedule == "adaptive" else max(1, args.segment)
 
     def eval_loss(params, batches):
         l, _ = model.loss_fn(params, batches, None)
         return l
 
-    eval_merged = jax.jit(lambda p, b: eval_loss(merged_model(p), b))
-    eval_local = jax.jit(jax.vmap(eval_loss, in_axes=(0, None)))
+    eval_merged = jax.jit(
+        lambda pan, b: eval_loss(panel_mod.merged_tree(pan, spec), b))
+    eval_local = jax.jit(
+        lambda pan, b: jnp.mean(jax.vmap(eval_loss, in_axes=(0, None))(
+            panel_mod.from_panel(pan, spec), b)))
 
     # a fixed GLOBAL eval batch (uniform domain mixture = global dist)
     glob_mix = np.ones(lm.num_domains) / lm.num_domains
@@ -104,28 +134,51 @@ def main():
     monitor = {}
     comm_cost = 0.0
     t0 = time.time()
-    for t in range(args.rounds):
-        W = sched.mixing_matrix(t, monitor)
-        comm_cost += sched.round_cost(W)
-        hb = make_agent_lm_batches(lm, mixtures, args.batch, args.seq, rng_np)
-        # (m, H, b, S) -> (H, m, b, S)
-        batches = jax.tree.map(
-            lambda x: jnp.asarray(np.repeat(x[None], args.local_steps, 0)),
-            hb)
+    t = 0
+    while t < args.rounds:
+        S = min(seg_len, args.rounds - t)
+        pad = seg_len - S  # tail segment: pad to the common length so the
+        # jitted scan is compiled ONCE (padded rounds are masked no-ops)
+        Ws, comm_after = [], []
+        for s in range(S):
+            W = sched.mixing_matrix(t + s, monitor)
+            comm_cost += sched.round_cost(W)
+            comm_after.append(comm_cost)
+            Ws.append(W)
+        Ws += [np.eye(m)] * pad
+        Ws = jnp.asarray(np.stack(Ws), jnp.float32)
+        batches = sample_segment_batches(lm, mixtures, S, args.local_steps,
+                                         args.batch, args.seq, rng_np)
+        if pad:
+            batches = {k: jnp.concatenate(
+                [v, jnp.zeros((pad,) + v.shape[1:], v.dtype)]) for k, v in
+                batches.items()}
+        active = jnp.asarray([True] * S + [False] * pad)
         key, k = jax.random.split(key)
-        state, mets = round_fn(state, batches, jnp.asarray(W, jnp.float32), k)
-        monitor = {"grad_norm": float(mets["grad_norm"]),
-                   "consensus": float(mets["consensus"])}
-        merged_l = float(eval_merged(state["params"], eval_batch))
-        local_l = float(jnp.mean(eval_local(state["params"], eval_batch)))
-        rec = {"round": t, "train_loss": float(mets["loss"]),
-               "merged_eval": merged_l, "local_eval": local_l,
-               "consensus": monitor["consensus"],
-               "grad_norm": monitor["grad_norm"], "comm_cost_P": comm_cost}
-        history.append(rec)
-        print(f"[{t:4d}] loss={rec['train_loss']:.4f} "
+        state, mets = segment_fn(state, batches, Ws, k, active)
+        mets = jax.device_get(mets)  # ONE transfer for the whole segment
+        mets = {k: v[:S] for k, v in mets.items()}
+        monitor = {"grad_norm": float(mets["grad_norm"][-1]),
+                   "consensus": float(mets["consensus"][-1])}
+        merged_l = float(eval_merged(state["panel"], eval_batch))
+        local_l = float(eval_local(state["panel"], eval_batch))
+        for s in range(S):
+            # merged/local eval is measured once per segment (at its end);
+            # intermediate rounds carry None so every record has the same
+            # schema
+            last = s == S - 1
+            history.append({"round": t + s,
+                            "train_loss": float(mets["loss"][s]),
+                            "consensus": float(mets["consensus"][s]),
+                            "grad_norm": float(mets["grad_norm"][s]),
+                            "merged_eval": merged_l if last else None,
+                            "local_eval": local_l if last else None,
+                            "comm_cost_P": comm_after[s]})
+        t += S
+        print(f"[{t - 1:4d}] loss={history[-1]['train_loss']:.4f} "
               f"local={local_l:.4f} merged={merged_l:.4f} "
-              f"Xi={rec['consensus']:.3f} comm={comm_cost:.1f}P", flush=True)
+              f"Xi={monitor['consensus']:.3f} comm={comm_cost:.1f}P",
+              flush=True)
     print(f"total {time.time()-t0:.1f}s")
 
     os.makedirs(args.out, exist_ok=True)
@@ -133,7 +186,7 @@ def main():
     with open(os.path.join(args.out, tag + ".json"), "w") as f:
         json.dump({"args": vars(args), "history": history}, f, indent=1)
     if args.save_merged:
-        save(args.save_merged, merged_model(state["params"]))
+        save(args.save_merged, panel_mod.merged_tree(state["panel"], spec))
         print("saved merged model to", args.save_merged)
 
 

@@ -1,0 +1,39 @@
+"""Fallback shim for ``hypothesis`` in offline containers.
+
+The property-test modules do ``from hypothesis import given, settings,
+strategies as st`` at import time; when hypothesis is not installable the
+whole module (and every plain test in it) used to die at collection. This
+stub mirrors just enough of the API that collection succeeds and each
+property test reports as SKIPPED instead. Install the ``dev`` extra
+(``pip install -e .[dev]``) to run the real property tests.
+"""
+from __future__ import annotations
+
+import pytest
+
+
+def given(*_args, **_kwargs):
+    def deco(fn):
+        # Zero-arg replacement: the strategy-driven parameters must not be
+        # visible to pytest or it would go looking for fixtures of the
+        # same names.
+        def _skipped():
+            pytest.skip("hypothesis not installed (dev extra)")
+        _skipped.__name__ = fn.__name__
+        _skipped.__doc__ = fn.__doc__
+        return _skipped
+    return deco
+
+
+def settings(*_args, **_kwargs):
+    return lambda fn: fn
+
+
+class _Strategies:
+    """Any ``st.<name>(...)`` call returns an inert placeholder."""
+
+    def __getattr__(self, name):
+        return lambda *a, **k: None
+
+
+strategies = _Strategies()

@@ -1,4 +1,8 @@
 import os
+import sys
+
+# Make the _hypothesis_stub fallback importable regardless of invocation dir.
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 
 # Tests run single-device (the dry-run sets its own 512-device env in a
 # subprocess); keep CPU math deterministic-ish and quiet.

@@ -1,7 +1,11 @@
 """Data pipeline: Dirichlet partitioning + synthetic generators."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline container: property tests skip gracefully
+    from _hypothesis_stub import given, settings, strategies as st
 
 from repro.data.dirichlet import dirichlet_partition, heterogeneity
 from repro.data.synthetic import (SyntheticClassification, SyntheticLM,

@@ -59,6 +59,8 @@ SCRIPT = textwrap.dedent("""
     ma = compiled.memory_analysis()
     per_kind, total, counts = collective_bytes(compiled.as_text())
     ca = compiled.cost_analysis()
+    if isinstance(ca, list):  # older jaxlib returns [dict]
+        ca = ca[0] if ca else {}
     print(json.dumps({
         "ok": True,
         "temp_gb": ma.temp_size_in_bytes / 1e9,
