@@ -15,10 +15,22 @@ paper's single global merging. Two engines, identical math:
 
 ``python -m benchmarks.panel_bench`` writes BENCH_panel.json with
 us_per_round for both paths at two sizes.
+
+``--sharded`` adds a third engine: the SAME fused round with the panel's D
+axis sharded over 'fsdp' on the (1,2,2,2) debug training mesh
+(core/panel.shard_spec) — per-shard matmuls, fsdp-local collectives — and
+records its us_per_round + the per-round collective bytes of the lowered
+scan next to the replicated numbers (merged into BENCH_panel.json under
+"sharded"). Needs 8 host devices; when the process has fewer it re-execs
+itself in a subprocess with ``--xla_force_host_platform_device_count``.
 """
 from __future__ import annotations
 
+import argparse
 import json
+import os
+import subprocess
+import sys
 import time
 
 import jax
@@ -125,17 +137,124 @@ def bench_size(m, d_model, layers, vocab, rounds, reps=3):
             "xi_parity_gap": round(abs(xi_tree - xi_panel), 6)}
 
 
+# debug training mesh used by --sharded: (pod=1, agent=2, fsdp=2, model=2)
+SHARDED_DEVICES = 8
+
+
+def bench_sharded(m=16, d_model=256, layers=8, vocab=512, rounds=8, reps=3):
+    """Fused panel round with D sharded over 'fsdp' on the debug training
+    mesh vs the replicated fused round on the same host. Returns the record
+    merged into BENCH_panel.json["sharded"]."""
+    from repro.launch import mesh as mesh_mod
+    from repro.utils.hlo import collective_bytes
+
+    mesh = mesh_mod.make_debug_mesh(agents=2, fsdp=2, model=2)
+    tree = _make_tree(m, d_model, layers, vocab)
+    repl_spec = panel_mod.make_spec(tree)
+    spec = panel_mod.shard_spec(repl_spec, mesh)
+    Ws = jnp.asarray(np.stack([
+        topology.random_matching(m, 0.5, np.random.default_rng(t))
+        for t in range(rounds)]), jnp.float32)
+
+    def make_seg(use_spec):
+        def seg(pan, Ws):
+            def body(p, W):
+                mixed = panel_mod.mix_dense(p, W, spec=use_spec)
+                return mixed, panel_mod.consensus_distance(mixed,
+                                                           spec=use_spec)
+            pan, xis = jax.lax.scan(body, pan, Ws)
+            return panel_mod.global_merge(pan, spec=use_spec), xis
+        return jax.jit(seg, donate_argnums=(0,))
+
+    def run(fn, pan):
+        merged, xis = fn(pan, Ws)
+        xis = jax.device_get(xis)
+        jax.block_until_ready(list(merged.values()))
+        return float(xis[-1])
+
+    def fresh(use_spec):
+        pan = {k: v + 0.0
+               for k, v in panel_mod.to_panel(tree, repl_spec).items()}
+        if use_spec is not None and use_spec.sharded:
+            pan = panel_mod.shard_panel(pan, use_spec)
+        jax.block_until_ready(list(pan.values()))
+        return pan
+
+    seg_repl, seg_shard = make_seg(None), make_seg(spec)
+    xi_repl = run(seg_repl, fresh(None))
+    xi_shard = run(seg_shard, fresh(spec))
+    assert abs(xi_repl - xi_shard) <= 1e-4 * max(abs(xi_repl), 1.0), (
+        xi_repl, xi_shard)
+
+    def clock(fn, use_spec):
+        ts = []
+        for _ in range(reps):
+            pan = fresh(use_spec)
+            t0 = time.perf_counter()
+            run(fn, pan)
+            ts.append(time.perf_counter() - t0)
+        return min(ts) / rounds * 1e6
+
+    us_repl = clock(seg_repl, None)
+    us_shard = clock(seg_shard, spec)
+    txt = seg_shard.lower(fresh(spec), Ws).compile().as_text()
+    per_kind, coll_total, _ = collective_bytes(txt)
+    return {"backend": jax.default_backend(), "mesh": dict(mesh.shape),
+            "devices": SHARDED_DEVICES, "m": m,
+            "D": spec.width, "rounds": rounds,
+            "pspecs": {k: str(ps) for k, ps in spec.pspecs},
+            "us_per_round_replicated": round(us_repl, 1),
+            "us_per_round_sharded": round(us_shard, 1),
+            "coll_bytes_per_round": int(coll_total // rounds),
+            "coll_kinds": sorted(per_kind),
+            "xi_parity_gap": round(abs(xi_repl - xi_shard), 6)}
+
+
+def _load_existing():
+    if os.path.exists("BENCH_panel.json"):
+        with open("BENCH_panel.json") as f:
+            return json.load(f)
+    return {}
+
+
 def main():
-    out = {"backend": jax.default_backend(),
-           "description": "fused panel gossip+merge round vs per-leaf "
-                          "tree-map path (us_per_round)",
-           "sizes": {}}
-    for name, kw in SIZES.items():
-        out["sizes"][name] = bench_size(**kw)
-        r = out["sizes"][name]
-        print(f"{name}: tree={r['us_per_round_tree']:.0f}us "
-              f"panel={r['us_per_round_panel']:.0f}us "
-              f"speedup={r['speedup']}x", flush=True)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sharded", action="store_true",
+                    help="bench the fsdp-sharded panel on the debug mesh "
+                         "(re-execs with forced host devices if needed)")
+    args = ap.parse_args()
+
+    if args.sharded and jax.device_count() < SHARDED_DEVICES:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                            " --xla_force_host_platform_device_count="
+                            f"{SHARDED_DEVICES}").strip()
+        env.setdefault("JAX_PLATFORMS", "cpu")
+        raise SystemExit(subprocess.run(
+            [sys.executable, "-m", "benchmarks.panel_bench", "--sharded"],
+            env=env).returncode)
+
+    out = _load_existing()
+    out.setdefault("description",
+                   "fused panel gossip+merge round vs per-leaf tree-map "
+                   "path (us_per_round)")
+
+    if args.sharded:
+        out["sharded"] = bench_sharded(**{k: v for k, v in
+                                          SIZES["default"].items()})
+        r = out["sharded"]
+        print(f"sharded: replicated={r['us_per_round_replicated']:.0f}us "
+              f"fsdp-sharded={r['us_per_round_sharded']:.0f}us "
+              f"coll={r['coll_bytes_per_round']}B/round", flush=True)
+    else:
+        out["backend"] = jax.default_backend()  # labels the "sizes" runs
+        out.setdefault("sizes", {})
+        for name, kw in SIZES.items():
+            out["sizes"][name] = bench_size(**kw)
+            r = out["sizes"][name]
+            print(f"{name}: tree={r['us_per_round_tree']:.0f}us "
+                  f"panel={r['us_per_round_panel']:.0f}us "
+                  f"speedup={r['speedup']}x", flush=True)
     with open("BENCH_panel.json", "w") as f:
         json.dump(out, f, indent=1)
     print("wrote BENCH_panel.json")

@@ -50,11 +50,27 @@ def _init_agent_params(init_params: Callable, m: int, rng,
     return jax.vmap(init_params)(jax.random.split(rng, m))
 
 
+def _place(tree, shardings):
+    """device_put (concrete) / sharding-constrain (traced) a pytree onto a
+    matching tree of NamedSharding (panel_mod.place per leaf)."""
+    return jax.tree.map(panel_mod.place, tree, shardings)
+
+
 def init_state(init_params: Callable, optimizer: Optimizer, m: int, rng,
-               same_init: bool = False):
-    """Agent-stacked train state (see _init_agent_params for same_init)."""
+               same_init: bool = False, shardings=None):
+    """Agent-stacked train state (see _init_agent_params for same_init).
+
+    ``shardings`` (a pytree of NamedSharding matching the params tree,
+    e.g. models.sharding.resolve(...) wrapped on a training mesh) places
+    the params AND the parameter-shaped optimizer moments; step counters
+    stay replicated."""
     params = _init_agent_params(init_params, m, rng, same_init)
+    if shardings is not None:
+        params = _place(params, shardings)
     opt_state = jax.vmap(optimizer.init)(params)
+    if shardings is not None:
+        opt_state = {k: (_place(v, shardings) if k in _MOMENT_KEYS else v)
+                     for k, v in opt_state.items()}
     return {"params": params, "opt": opt_state,
             "step": jnp.zeros((), jnp.int32)}
 
@@ -159,17 +175,46 @@ _MOMENT_KEYS = ("m", "v", "mu")
 
 
 def init_panel_state(init_params: Callable, optimizer: Optimizer, m: int,
-                     rng, same_init: bool = False):
+                     rng, same_init: bool = False, mesh=None):
     """Panel train state: params AND optimizer moments as per-dtype (m, D)
     panels. Returns (state, spec); the static spec is what turns panels
     back into model pytrees. The optimizer transforms are elementwise, so
-    they run directly on the panel leaves — no per-leaf dispatch."""
+    they run directly on the panel leaves — no per-leaf dispatch.
+
+    ``mesh`` shards the panels: rows over ('pod','agent'), D over 'fsdp'
+    (panel_mod.shard_spec); the optimizer-moment panels mirror the
+    parameter panel layout exactly."""
     params = _init_agent_params(init_params, m, rng, same_init)
     spec = panel_mod.make_spec(params)
+    if mesh is not None:
+        spec = panel_mod.shard_spec(spec, mesh)
     pan = panel_mod.to_panel(params, spec)
     opt_state = jax.vmap(optimizer.init)(pan)
+    if spec.sharded:
+        opt_state = {k: (panel_mod.shard_panel(v, spec)
+                         if k in _MOMENT_KEYS else v)
+                     for k, v in opt_state.items()}
     return {"panel": pan, "opt": opt_state,
             "step": jnp.zeros((), jnp.int32)}, spec
+
+
+def panel_state_shardings(state, spec):
+    """NamedSharding pytree for a panel train state on a sharded spec —
+    the ``in_shardings`` a caller hands to jit when lowering the segment
+    driver against ShapeDtypeStructs (launch/dryrun.py, sharded tests)."""
+    assert spec.sharded, "panel_state_shardings needs a shard_spec'ed spec"
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    repl = NamedSharding(spec.mesh, P())
+
+    def group_sh(panel_like):
+        return {k: (spec.sharding(k) or repl) for k in panel_like}
+
+    opt = {k: (group_sh(v) if k in _MOMENT_KEYS
+               else jax.tree.map(lambda _: repl, v))
+           for k, v in state["opt"].items()}
+    return {"panel": group_sh(state["panel"]), "opt": opt, "step": repl}
 
 
 def panelize_state(state, spec):
@@ -191,7 +236,8 @@ def unpanelize_state(state, spec):
 def make_panel_segment(loss_fn: Callable, optimizer: Optimizer,
                        local_steps: int, spec, *, wire_dtype=None,
                        monitor: bool = True, use_pallas: bool = False,
-                       interpret: bool = True, donate: bool = True):
+                       interpret: bool = True, donate: bool = True,
+                       param_shardings=None, in_shardings=None):
     """Donated, scanned panel driver: one dispatch per SCHEDULE SEGMENT.
 
     segment(state, batches, Ws, rng, active=None) -> (state, metrics) with
@@ -211,7 +257,15 @@ def make_panel_segment(loss_fn: Callable, optimizer: Optimizer,
     segment length instead of retracing/recompiling the whole scan for a
     one-off smaller S: rounds with ``active[s] == False`` are full no-ops
     (state passes through untouched, metrics report 0) and their
-    Ws/batches entries are ignored."""
+    Ws/batches entries are ignored.
+
+    On a sharded ``spec`` (shard_spec / init_panel_state(mesh=...)) every
+    fused op keeps the panels in their mesh layout, so mixing lowers to
+    per-fsdp-shard matmuls with agent-axis collectives that carry only the
+    local column shard. ``param_shardings`` (NamedSharding pytree matching
+    the model params, agent-stacked) re-pins the rebuilt per-leaf params
+    for the grad compute; ``in_shardings`` is forwarded to jax.jit for
+    lowering against ShapeDtypeStructs."""
 
     def one(p, b, r):
         (l, aux), g = jax.value_and_grad(loss_fn, has_aux=True)(p, b, r)
@@ -225,7 +279,8 @@ def make_panel_segment(loss_fn: Callable, optimizer: Optimizer,
             pan, opt = carry
             batch, r = xs
             rngs = jax.random.split(r, m)
-            params = panel_mod.from_panel(pan, spec)
+            params = panel_mod.from_panel(pan, spec,
+                                          leaf_shardings=param_shardings)
             grads, losses = jax.vmap(one)(params, batch, rngs)
             gpan = panel_mod.to_panel(grads, spec)
             new_pan, new_opt = jax.vmap(optimizer.update)(gpan, opt, pan)
@@ -245,12 +300,14 @@ def make_panel_segment(loss_fn: Callable, optimizer: Optimizer,
                 idle, lambda p: p,
                 lambda p: panel_mod.mix_dense(p, W, wire_dtype=wire_dtype,
                                               use_pallas=use_pallas,
-                                              interpret=interpret),
+                                              interpret=interpret,
+                                              spec=spec),
                 pan)
             mets = {"loss": jnp.mean(losses), "grad_norm": gns[-1]}
             if monitor:
                 mets["consensus"] = panel_mod.consensus_distance(
-                    mixed, use_pallas=use_pallas, interpret=interpret)
+                    mixed, use_pallas=use_pallas, interpret=interpret,
+                    spec=spec)
             return (mixed, opt), mets
 
         def round_body(carry, xs):
@@ -279,7 +336,8 @@ def make_panel_segment(loss_fn: Callable, optimizer: Optimizer,
         return ({"panel": pan, "opt": opt,
                  "step": state["step"] + steps}, metrics)
 
-    return jax.jit(segment, donate_argnums=(0,) if donate else ())
+    jit_kw = {} if in_shardings is None else {"in_shardings": in_shardings}
+    return jax.jit(segment, donate_argnums=(0,) if donate else (), **jit_kw)
 
 
 def make_parallel_step(loss_fn: Callable, optimizer: Optimizer):

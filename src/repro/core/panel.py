@@ -23,17 +23,29 @@ the panel instead of one op per pytree leaf:
 beyond-paper bf16-wire compression lever). The per-leaf tree-map originals
 survive in core/gossip.py as ``*_tree`` — they remain the right lowering
 when leaves carry heterogeneous shardings (launch/dryrun.py pod meshes),
-and they are the baseline the panel path is benchmarked against
-(benchmarks/panel_bench.py).
+and they are the parity oracle the panel path is validated/benchmarked
+against (tests/test_panel_sharded.py, benchmarks/panel_bench.py).
+
+**Multi-device panels.** :func:`shard_spec` attaches a mesh and one
+PartitionSpec per dtype group to the spec — rows over the ('pod','agent')
+communication axes, the flat D columns over 'fsdp' (models/sharding.py:
+``panel_pspec``). Every fused op then constrains its output to the group
+sharding, so the mix lowers to per-fsdp-shard (m,m)x(m, D/fsdp) matmuls
+whose collectives move only the LOCAL column shard (gossip traffic /fsdp
+per device), and the consensus scalar finishes with a single cross-shard
+reduce. The Pallas kernels are single-device bodies — a sharded spec
+routes those ops through the plain-XLA path so SPMD can partition them.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
 
 from repro.kernels.gossip_mix import gossip_mix_panel
 from repro.kernels.panel_reduce import panel_mean_consensus
@@ -51,10 +63,17 @@ class LeafSpec:
 @dataclass(frozen=True)
 class PanelSpec:
     """Static description of a panelised pytree. Hashable — safe to close
-    over in jitted functions or pass as a static argument."""
+    over in jitted functions or pass as a static argument.
+
+    ``mesh``/``pspecs`` (set by :func:`shard_spec`) describe how each
+    (m, D_g) group panel is laid out on a device mesh; unset means the
+    single-device / fully-replicated layout."""
     treedef: object
     leaves: Tuple[LeafSpec, ...]
     groups: Tuple[Tuple[str, int], ...]  # (dtype key, group width D_g)
+    rows: int = 0                        # m (agents); 0 on legacy specs
+    mesh: Optional[jax.sharding.Mesh] = None
+    pspecs: Tuple[Tuple[str, P], ...] = ()  # (dtype key, group PartitionSpec)
 
     @property
     def width(self) -> int:
@@ -65,6 +84,30 @@ class PanelSpec:
     def wire_bytes(self) -> int:
         """Per-agent payload bytes of one full-panel exchange."""
         return sum(w * jnp.dtype(k).itemsize for k, w in self.groups)
+
+    @property
+    def sharded(self) -> bool:
+        return self.mesh is not None and bool(self.pspecs)
+
+    def pspec(self, key: str) -> Optional[P]:
+        for k, ps in self.pspecs:
+            if k == key:
+                return ps
+        return None
+
+    def sharding(self, key: str) -> Optional[NamedSharding]:
+        """NamedSharding of one dtype group's (m, D_g) panel, or None."""
+        ps = self.pspec(key)
+        if self.mesh is None or ps is None:
+            return None
+        return NamedSharding(self.mesh, ps)
+
+    def merged_sharding(self, key: str) -> Optional[NamedSharding]:
+        """NamedSharding of a merged (D_g,) panel: column axes only."""
+        ps = self.pspec(key)
+        if self.mesh is None or ps is None:
+            return None
+        return NamedSharding(self.mesh, P(*ps[1:2]))
 
 
 def make_spec(tree) -> PanelSpec:
@@ -80,24 +123,75 @@ def make_spec(tree) -> PanelSpec:
                               shape=tuple(x.shape[1:]), dtype=key))
         offsets[key] = off + size
     groups = tuple(sorted(offsets.items()))
-    return PanelSpec(treedef=treedef, leaves=tuple(specs), groups=groups)
+    rows = int(leaves[0].shape[0]) if leaves else 0
+    return PanelSpec(treedef=treedef, leaves=tuple(specs), groups=groups,
+                     rows=rows)
+
+
+def shard_spec(spec: PanelSpec, mesh, row_axes=None, col_axes=None
+               ) -> PanelSpec:
+    """Attach a mesh + per-group PartitionSpecs to ``spec``.
+
+    Rows go on the ('pod','agent') communication axes, columns on 'fsdp'
+    (overridable); either is dropped per group when the dim does not divide
+    by the axis size — that group stays replicated along it."""
+    from repro.models.sharding import (PANEL_COL_AXES, PANEL_ROW_AXES,
+                                       panel_pspec)
+    row_axes = PANEL_ROW_AXES if row_axes is None else row_axes
+    col_axes = PANEL_COL_AXES if col_axes is None else col_axes
+    pspecs = tuple(
+        (k, panel_pspec(mesh, spec.rows, w, row_axes, col_axes))
+        for k, w in spec.groups)
+    return replace(spec, mesh=mesh, pspecs=pspecs)
+
+
+def place(x, ns: Optional[NamedSharding]):
+    """Pin one array to a sharding. Inside a trace this is a
+    with_sharding_constraint (the SPMD partitioner boundary); on concrete
+    arrays it is a device_put (initialization / host-side resharding).
+    Shared by the panel ops here and dsgd.init_state's tree placement."""
+    if ns is None:
+        return x
+    if isinstance(x, jax.core.Tracer):
+        return jax.lax.with_sharding_constraint(x, ns)
+    return jax.device_put(x, ns)
+
+
+def _constrain_group(x, spec: Optional[PanelSpec], key: str,
+                     merged_panel: bool = False):
+    if spec is None:
+        return x
+    return place(x, spec.merged_sharding(key) if merged_panel
+                 else spec.sharding(key))
+
+
+def shard_panel(panel, spec: PanelSpec):
+    """Apply the spec's group shardings to an existing panel dict (used for
+    optimizer-moment panels, which mirror the parameter panel layout)."""
+    return {k: _constrain_group(x, spec, k) for k, x in panel.items()}
 
 
 def to_panel(tree, spec: PanelSpec):
-    """Flatten an agent-stacked pytree into {dtype: (m, D_dtype)} panels."""
+    """Flatten an agent-stacked pytree into {dtype: (m, D_dtype)} panels.
+    On a sharded spec the group panels are pinned to their mesh layout."""
     leaves = jax.tree_util.tree_leaves(tree)
     m = leaves[0].shape[0]
     parts: dict = {}
     for x, ls in zip(leaves, spec.leaves):
         parts.setdefault(ls.group, []).append(x.reshape(m, ls.size))
-    return {k: (fl[0] if len(fl) == 1 else jnp.concatenate(fl, axis=1))
-            for k, fl in parts.items()}
+    panel = {k: (fl[0] if len(fl) == 1 else jnp.concatenate(fl, axis=1))
+             for k, fl in parts.items()}
+    return shard_panel(panel, spec) if spec.sharded else panel
 
 
-def from_panel(panel, spec: PanelSpec, cast: bool = True):
+def from_panel(panel, spec: PanelSpec, cast: bool = True,
+               leaf_shardings=None):
     """Rebuild the pytree from panels. Accepts (m, D) panels (stacked tree)
     or (D,) panels (a merged model — leaves drop the agent axis).
-    ``cast=False`` keeps the panel dtype (e.g. the f32 merged model)."""
+    ``cast=False`` keeps the panel dtype (e.g. the f32 merged model).
+    ``leaf_shardings`` (a matching pytree of NamedSharding/PartitionSpec)
+    re-pins each rebuilt leaf to its model-natural layout — the compute-side
+    boundary of a D-sharded panel, whose flat columns cut across leaf dims."""
     outs = []
     for ls in spec.leaves:
         g = panel[ls.group]
@@ -107,7 +201,11 @@ def from_panel(panel, spec: PanelSpec, cast: bool = True):
         else:
             x = g[ls.offset:ls.offset + ls.size].reshape(ls.shape)
         outs.append(x.astype(ls.dtype) if cast else x)
-    return jax.tree_util.tree_unflatten(spec.treedef, outs)
+    tree = jax.tree_util.tree_unflatten(spec.treedef, outs)
+    if leaf_shardings is not None:
+        tree = jax.tree.map(jax.lax.with_sharding_constraint, tree,
+                            leaf_shardings)
+    return tree
 
 
 # ------------------------------------------------------------ fused ops
@@ -119,68 +217,90 @@ def _wire(x, wire_dtype):
     return x.astype(wire_dtype), lambda y: y.astype(x.dtype)
 
 
-def mix_dense(panel, W, *, wire_dtype=None, use_pallas: bool = False,
-              block_d: int = 512, interpret: bool = True):
-    """Theta <- W Theta: one f32-accumulating matmul per dtype group."""
-    W32 = W.astype(jnp.float32)
+def _pallas_ok(use_pallas: bool, spec: Optional[PanelSpec]) -> bool:
+    # Pallas kernel bodies are single-device programs; on a sharded spec the
+    # op must stay plain XLA so the SPMD partitioner can split it into the
+    # per-shard matmuls + local collectives this layout exists for.
+    return use_pallas and not (spec is not None and spec.sharded)
 
-    def one(x):
+
+def mix_dense(panel, W, *, wire_dtype=None, use_pallas: bool = False,
+              block_d: int = 512, interpret: bool = True,
+              spec: Optional[PanelSpec] = None):
+    """Theta <- W Theta: one f32-accumulating matmul per dtype group.
+
+    With a sharded ``spec`` the output is constrained to the group layout,
+    so each fsdp shard runs its own (m,m)x(m, D_g/fsdp) matmul and the
+    cross-agent collective carries only that shard's columns."""
+    W32 = W.astype(jnp.float32)
+    pallas = _pallas_ok(use_pallas, spec)
+
+    def one(k, x):
         xw, back = _wire(x, wire_dtype)
-        if use_pallas:
+        if pallas:
             y = gossip_mix_panel(W32, xw, block_d=block_d,
                                  interpret=interpret)
         else:
             y = (W32 @ xw.astype(jnp.float32)).astype(xw.dtype)
-        return back(y)
+        return _constrain_group(back(y), spec, k)
 
-    return {k: one(x) for k, x in panel.items()}
+    return {k: one(k, x) for k, x in panel.items()}
 
 
-def mix_pairwise(panel, partner, weight=0.5, *, wire_dtype=None):
+def mix_pairwise(panel, partner, weight=0.5, *, wire_dtype=None,
+                 spec: Optional[PanelSpec] = None):
     """theta_k <- (1-w) theta_k + w theta_{partner[k]}: one gather + lerp
     per dtype group. partner[k] == k means agent k idles this round."""
-    def one(x):
+    def one(k, x):
         xw, back = _wire(x, wire_dtype)
         peer = jnp.take(xw, partner, axis=0)
-        return back((1.0 - weight) * xw + weight * peer)
+        return _constrain_group(back((1.0 - weight) * xw + weight * peer),
+                                spec, k)
 
-    return {k: one(x) for k, x in panel.items()}
+    return {k: one(k, x) for k, x in panel.items()}
 
 
-def global_merge(panel, *, wire_dtype=None):
-    """theta_k <- mean_l theta_l: one mean-reduce + broadcast per group."""
-    def one(x):
+def global_merge(panel, *, wire_dtype=None,
+                 spec: Optional[PanelSpec] = None):
+    """theta_k <- mean_l theta_l: one mean-reduce + broadcast per group.
+    Sharded: an all-reduce over the agent axes per fsdp column shard."""
+    def one(k, x):
         xw, back = _wire(x, wire_dtype)
         mean = jnp.mean(xw.astype(jnp.float32), axis=0, keepdims=True)
-        return back(jnp.broadcast_to(mean, xw.shape).astype(xw.dtype))
+        y = back(jnp.broadcast_to(mean, xw.shape).astype(xw.dtype))
+        return _constrain_group(y, spec, k)
 
-    return {k: one(x) for k, x in panel.items()}
+    return {k: one(k, x) for k, x in panel.items()}
 
 
 def merged(panel, *, use_pallas: bool = False, block_d: int = 512,
-           interpret: bool = True):
+           interpret: bool = True, spec: Optional[PanelSpec] = None):
     """The (counterfactual) averaged model as {dtype: (D_dtype,)} f32."""
-    if use_pallas:
+    if _pallas_ok(use_pallas, spec):
         return {k: panel_mean_consensus(x, block_d=block_d,
                                         interpret=interpret)[0]
                 for k, x in panel.items()}
-    return {k: jnp.mean(x.astype(jnp.float32), axis=0)
+    return {k: _constrain_group(jnp.mean(x.astype(jnp.float32), axis=0),
+                                spec, k, merged_panel=True)
             for k, x in panel.items()}
 
 
 def merged_tree(panel, spec: PanelSpec):
     """Averaged model as a (non-stacked) pytree with f32 leaves — the panel
     equivalent of gossip.merged_model."""
-    return from_panel(merged(panel), spec, cast=False)
+    return from_panel(merged(panel, spec=spec), spec, cast=False)
 
 
 def consensus_distance(panel, *, use_pallas: bool = False,
-                       block_d: int = 512, interpret: bool = True):
-    """Xi_t = sqrt((1/m) sum_k ||theta_k - bar||^2) in one fused pass."""
+                       block_d: int = 512, interpret: bool = True,
+                       spec: Optional[PanelSpec] = None):
+    """Xi_t = sqrt((1/m) sum_k ||theta_k - bar||^2) in one fused pass.
+    Sharded: per-shard partial sums of squares + ONE scalar reduce."""
     m = next(iter(panel.values())).shape[0]
     total = jnp.zeros((), jnp.float32)
+    pallas = _pallas_ok(use_pallas, spec)
     for x in panel.values():
-        if use_pallas:
+        if pallas:
             _, sq = panel_mean_consensus(x, block_d=block_d,
                                          interpret=interpret)
         else:

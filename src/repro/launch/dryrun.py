@@ -17,6 +17,9 @@ Variants (the §Perf levers; "baseline" is the paper-faithful config):
   pairwise      partner-gather pairwise gossip               (collective /m)
   remat_dots    remat policy dots_saveable                   (compute down)
   nochunk       un-chunked CE loss                           (memory up)
+  panel         flat-panel segment engine, panels D-sharded over 'fsdp'
+                (fused mix -> per-shard matmuls, fsdp-local collectives)
+  panel_bf16wire  panel engine with a bf16 gossip payload
 """
 
 import argparse  # noqa: E402
@@ -33,6 +36,7 @@ from jax.sharding import PartitionSpec as P  # noqa: E402
 
 from repro.configs import INPUT_SHAPES, get_config, list_archs  # noqa: E402
 from repro.core import dsgd  # noqa: E402
+from repro.core import panel as panel_mod  # noqa: E402
 from repro.launch import mesh as mesh_mod  # noqa: E402
 from repro.models import build_model  # noqa: E402
 from repro.models.sharding import (TRAIN_RULES, activation_sharding,  # noqa: E402
@@ -144,6 +148,56 @@ def build_train(cfg, shape, multi_pod, variant, scan=False):
     return fn, args, mesh, TRAIN_RULES, {"agents": m}
 
 
+def build_train_panel(cfg, shape, multi_pod, variant, scan=True):
+    """Flat-panel segment engine on the training mesh: the (m, D) panels are
+    row-sharded over ('pod','agent') and D-sharded over 'fsdp'
+    (core/panel.shard_spec), the per-leaf params/grads inside the local step
+    keep their model-natural layouts via ``param_shardings``, and ONE
+    S=1/H=1 segment is lowered so the record's collectives show the fused
+    mix as per-shard matmuls + fsdp-local gossip traffic."""
+    cfg = _variant_cfg(cfg, variant, scan=scan)
+    model = build_model(cfg)
+    mesh = mesh_mod.make_training_mesh(cfg.dist.agents_per_pod,
+                                       multi_pod=multi_pod)
+    m = mesh_mod.num_agents(mesh)
+    opt = make_optimizer("adamw", 1e-4)
+    key = jax.random.PRNGKey(0)
+
+    params_sds = jax.eval_shape(
+        lambda k: dsgd._init_agent_params(model.init_params, m, k, False),
+        key)
+    spec = panel_mod.shard_spec(panel_mod.make_spec(params_sds), mesh)
+    state_sds = jax.eval_shape(
+        lambda k: dsgd.init_panel_state(model.init_params, opt, m, k)[0],
+        key)
+    param_ps = resolve(model.param_spec(), params_sds, mesh, TRAIN_RULES,
+                       prefix=(("pod", "agent"),))
+    param_sh = _named(mesh, param_ps)
+
+    batch_shapes = model.input_specs(shape, agents=m)
+    batch_ps = _batch_pspec(batch_shapes, ("pod", "agent"), mesh,
+                            inner_axis="fsdp")
+    # (S=1, H=1) segment wrapping: two leading scan dims, replicated
+    seg_batch = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((1, 1) + s.shape, s.dtype),
+        batch_shapes)
+    seg_batch_ps = jax.tree.map(lambda ps: P(None, None, *ps), batch_ps,
+                                is_leaf=_leaf_is_pspec)
+
+    wire = jnp.bfloat16 if "bf16wire" in variant else None
+    in_sh = (dsgd.panel_state_shardings(state_sds, spec),
+             _named(mesh, seg_batch_ps),
+             NamedSharding(mesh, P()), NamedSharding(mesh, P()))
+    fn = dsgd.make_panel_segment(model.loss_fn, opt, 1, spec,
+                                 wire_dtype=wire, param_shardings=param_sh,
+                                 in_shardings=in_sh)
+    w_sds = jax.ShapeDtypeStruct((1, m, m), jnp.float32)
+    key_sds = jax.eval_shape(lambda: jax.random.PRNGKey(0))
+    args = (state_sds, seg_batch, w_sds, key_sds)
+    return fn, args, mesh, TRAIN_RULES, {"agents": m,
+                                         "panel_width": spec.width}
+
+
 def build_serve(cfg, shape, multi_pod, variant):
     cfg = _variant_cfg(cfg, variant)
     cfg = cfg.replace(param_dtype="bfloat16", compute_dtype="bfloat16",
@@ -222,7 +276,7 @@ def run_train_extrapolated(cfg, shape, multi_pod, variant, rec):
     rec["compile_s"] = round(time.time() - t0, 2)
 
     def costs(c):
-        ca = c.cost_analysis() or {}
+        ca = _cost_dict(c)
         _, coll, _ = collective_bytes(c.as_text())
         return (float(ca.get("flops", 0.0)),
                 float(ca.get("bytes accessed", 0.0)), float(coll))
@@ -257,6 +311,14 @@ def run_train_extrapolated(cfg, shape, multi_pod, variant, rec):
     return rec, hlo_flops, hlo_bytes, coll_total, mesh.devices.size
 
 
+def _cost_dict(compiled):
+    """compiled.cost_analysis() across jaxlib versions: dict or [dict]."""
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, list):
+        ca = ca[0] if ca else {}
+    return ca
+
+
 def roofline_terms(hlo_flops, hlo_bytes, coll_bytes, chips):
     return {
         "compute_s": hlo_flops / PEAK_FLOPS,
@@ -287,11 +349,18 @@ def run_pair(arch, shape_name, multi_pod, variant="baseline", outdir=None):
                 _dump(rec, tag, outdir)
                 return rec
         cfg = get_config(eff_arch)
-        if shape.kind == "train" and cfg.num_layers >= HEAVY_TRAIN_LAYERS:
+        is_panel = variant.startswith("panel")
+        if (shape.kind == "train" and not is_panel
+                and cfg.num_layers >= HEAVY_TRAIN_LAYERS):
             rec, hlo_flops, hlo_bytes, coll_total, chips = (
                 run_train_extrapolated(cfg, shape, multi_pod, variant, rec))
         else:
-            build = build_train if shape.kind == "train" else build_serve
+            if shape.kind == "train":
+                # panel variants lower the fused segment engine directly
+                # (scan-over-layers; no unrolled extrapolation pass)
+                build = build_train_panel if is_panel else build_train
+            else:
+                build = build_serve
             fn, args, mesh, rules, extra = build(cfg, shape, multi_pod,
                                                  variant)
             rec.update(extra)
@@ -320,7 +389,7 @@ def run_pair(arch, shape_name, multi_pod, variant="baseline", outdir=None):
             rec["memory"]["per_device_total"] = int(per_dev_total)
             rec["memory"]["fits_16gb"] = bool(per_dev_total < 16e9)
 
-            ca = compiled.cost_analysis() or {}
+            ca = _cost_dict(compiled)
             hlo_flops = float(ca.get("flops", 0.0))
             hlo_bytes = float(ca.get("bytes accessed", 0.0))
             rec["cost"] = {"flops_per_device": hlo_flops,

@@ -10,11 +10,19 @@ DISTINCT batches per round (Algorithm 1's local SGD), on-device metric
 accumulation, and a single device_get per segment.
 
 On this CPU container use ``--preset cpu`` (tiny model, 1-device mesh); on a
-pod the same script drives the production mesh.
+pod the same script drives the production training mesh: ``--mesh train``
+builds mesh.make_training_mesh and shards the panel rows over
+('pod','agent') and the flat D axis over 'fsdp' (core/panel.shard_spec), so
+the fused mix lowers to per-shard matmuls with fsdp-local collectives
+instead of silently requiring replicated state. ``--mesh debug`` runs the
+same lowering on the (1,2,2,2) debug mesh (needs
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
 
 Examples:
   PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --preset cpu \
       --rounds 20 --schedule final_merge
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+      python -m repro.launch.train --preset cpu --mesh debug --rounds 4
 """
 from __future__ import annotations
 
@@ -27,6 +35,8 @@ import time
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
 
 from repro.checkpoint import save
 from repro.configs import get_config
@@ -34,8 +44,28 @@ from repro.core import dsgd
 from repro.core import panel as panel_mod
 from repro.core.schedule import make_schedule
 from repro.data.synthetic import SyntheticLM, make_agent_lm_batches
+from repro.launch import mesh as mesh_mod
 from repro.models import build_model
 from repro.optim import make_optimizer
+
+
+def build_mesh(kind: str, preset: str, cfg):
+    """Resolve --mesh: None (single-device/replicated panels) or a
+    ('pod','agent','fsdp','model') training mesh the panel is sharded on."""
+    if kind == "auto":
+        kind = "train" if preset == "pod" else "none"
+    if kind == "none":
+        return None
+    if kind == "train":
+        return mesh_mod.make_training_mesh(cfg.dist.agents_per_pod)
+    if kind == "debug":
+        need = 8
+        if jax.device_count() < need:
+            raise SystemExit(
+                f"--mesh debug needs {need} devices; set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={need}")
+        return mesh_mod.make_debug_mesh(agents=2, fsdp=2, model=2)
+    raise ValueError(kind)
 
 
 def build_cpu_preset(cfg, agents):
@@ -82,6 +112,11 @@ def main():
                     help="Dirichlet heterogeneity")
     ap.add_argument("--wire", default="f32", choices=["f32", "bf16"],
                     help="gossip payload dtype (bf16 halves wire bytes)")
+    ap.add_argument("--mesh", default="auto",
+                    choices=["auto", "none", "train", "debug"],
+                    help="shard the (m, D) panel on a training mesh: rows "
+                         "over ('pod','agent'), D over 'fsdp' (auto: train "
+                         "for --preset pod, none for cpu)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="results/train")
     ap.add_argument("--save-merged", default="")
@@ -95,8 +130,20 @@ def main():
     opt = make_optimizer(args.optimizer, args.lr, weight_decay=5e-4,
                          total_steps=args.rounds * args.local_steps)
 
+    mesh = build_mesh(args.mesh, args.preset, cfg)
+    batch_sharding = None
+    if mesh is not None:
+        rows = mesh_mod.num_agents(mesh)
+        if m % rows:
+            raise SystemExit(f"--agents {m} must be divisible by the mesh's "
+                             f"pod*agent = {rows} so panel rows shard evenly")
+        # (S, H, m, b, ...) batches: agent rows on the communication axes
+        batch_sharding = NamedSharding(mesh, P(None, None, ("pod", "agent")))
+        print(f"panel sharded on mesh {dict(mesh.shape)}")
+
     key = jax.random.PRNGKey(args.seed)
-    state, spec = dsgd.init_panel_state(model.init_params, opt, m, key)
+    state, spec = dsgd.init_panel_state(model.init_params, opt, m, key,
+                                        mesh=mesh)
     wire = jnp.bfloat16 if args.wire == "bf16" else None
     segment_fn = dsgd.make_panel_segment(model.loss_fn, opt,
                                          args.local_steps, spec,
@@ -153,6 +200,9 @@ def main():
             batches = {k: jnp.concatenate(
                 [v, jnp.zeros((pad,) + v.shape[1:], v.dtype)]) for k, v in
                 batches.items()}
+        if batch_sharding is not None:
+            batches = {k: jax.device_put(v, batch_sharding)
+                       for k, v in batches.items()}
         active = jnp.asarray([True] * S + [False] * pad)
         key, k = jax.random.split(key)
         state, mets = segment_fn(state, batches, Ws, k, active)

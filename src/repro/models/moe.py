@@ -92,8 +92,26 @@ def _route(x2, params, m: MoEConfig):
     return w, sel, aux
 
 
-def moe_forward(params, x, *, cfg: ModelConfig, act_name: str):
-    """x: (B, S, d) -> (y, aux_loss)."""
+def moe_forward(params, x, *, cfg: ModelConfig, act_name: str,
+                dropless: bool = False):
+    """x: (B, S, d) -> (y, aux_loss).
+
+    ``dropless=True`` sets per-expert capacity to T (each token reaches an
+    expert at most once, so nothing ever overflows). Inference MUST run
+    dropless: capacity C = ceil(T*k/E*cf) depends on the total token count
+    and every token's routing, so whether token i is dropped depends on
+    LATER tokens — teacher-forced decode could never reproduce a full
+    forward, and in serving one request's load would perturb another's
+    logits. Training keeps the capped buffer (standard capacity-factor
+    throughput/memory trade; the aux loss pushes the load toward balance).
+
+    C = T is the MINIMAL static dropless capacity (adversarial routing can
+    send every token to one expert, and XLA needs static shapes), but it
+    makes the dispatch buffer (E, T+1, d) — at large E this dominates
+    prefill activation memory. The production fix is a grouped/ragged
+    expert matmul over the expert-sorted (T*k, d) layout instead of the
+    scatter buffer (see ROADMAP "Dropless MoE dispatch").
+    """
     m = cfg.moe
     act = activation(act_name)
     B, S, d = x.shape
@@ -102,8 +120,11 @@ def moe_forward(params, x, *, cfg: ModelConfig, act_name: str):
     w, sel, aux = _route(x2, params, m)
 
     E, k = m.num_experts, m.top_k
-    C = max(1, int(np.ceil(T * k / E * m.capacity_factor)))
-    C = min(C, T)
+    if dropless:
+        C = T
+    else:
+        C = max(1, int(np.ceil(T * k / E * m.capacity_factor)))
+        C = min(C, T)
 
     flat_e = sel.reshape(-1)  # (T*k,) expert id per assignment
     # rank of each assignment within its expert via sort-based segment ranks

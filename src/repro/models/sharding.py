@@ -167,6 +167,34 @@ def resolve(spec_tree, shape_tree, mesh, rules, prefix=()):
 
 TRAIN_RULES = {"fsdp": "fsdp", "model": "model", "expert": "model",
                "data": ("pod", "agent")}
+
+# The flat-panel engine's layout on the training mesh: panel rows (one per
+# agent) live on the ('pod','agent') axes — the paper's communication graph —
+# and the flattened parameter columns are FSDP-sharded. The 'model' axis
+# replicates the panel: tensor parallelism applies to the model's 2D weight
+# layout, which the flat D axis deliberately erases (see core/panel.py).
+PANEL_ROW_AXES = ("pod", "agent")
+PANEL_COL_AXES = ("fsdp",)
+
+
+def panel_pspec(mesh, rows: int, width: int,
+                row_axes=PANEL_ROW_AXES, col_axes=PANEL_COL_AXES) -> P:
+    """PartitionSpec for one (rows, width) panel group on ``mesh``.
+
+    Same drop-on-indivisible policy as :func:`resolve_leaf`: an axis set is
+    claimed only when present on the mesh AND the dim divides by its total
+    size — XLA replicates the dim otherwise, which is the correct fallback
+    (e.g. an odd-width bf16 dtype group on a 2-way fsdp axis)."""
+    def claim(dim, axes):
+        axes = tuple(a for a in axes if a in mesh.axis_names)
+        if not axes:
+            return None
+        size = _axis_size(mesh, axes)
+        if size <= 1 or dim % size:
+            return None
+        return axes if len(axes) > 1 else axes[0]
+
+    return P(claim(rows, row_axes), claim(width, col_axes))
 SERVE_RULES_SMALL = {"fsdp": None, "model": "model", "expert": "model",
                      "data": "data"}
 

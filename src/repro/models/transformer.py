@@ -138,8 +138,11 @@ def apply_block(params, x, *, cfg: ModelConfig, lspec: LayerSpec, mode: str,
     if lspec.ffn != "none":
         h2 = apply_norm(params["norm2"], x, cfg.norm)
         if lspec.ffn == "moe":
+            # prefill/decode run dropless: capacity dropping is only causal
+            # in training where the whole batch is one step (see moe_forward)
             y2, aux = moe_mod.moe_forward(params["ffn"], h2, cfg=cfg,
-                                          act_name=cfg.act)
+                                          act_name=cfg.act,
+                                          dropless=mode != "train")
         else:
             y2 = apply_mlp(params["ffn"], h2, activation(cfg.act), gated=True)
         x = x + y2

@@ -29,11 +29,23 @@ def settings(*_args, **_kwargs):
     return lambda fn: fn
 
 
-class _Strategies:
-    """Any ``st.<name>(...)`` call returns an inert placeholder."""
+class _Inert:
+    """Absorbs any chained use of a strategy: ``st.lists(...)``,
+    ``st.tuples(...).map(f)``, ``st.sampled_from(...).filter(g)`` — every
+    attribute access and call returns the same inert object."""
+
+    def __call__(self, *a, **k):
+        return self
 
     def __getattr__(self, name):
-        return lambda *a, **k: None
+        return self
+
+
+class _Strategies:
+    """Any ``st.<name>`` lookup returns an inert placeholder."""
+
+    def __getattr__(self, name):
+        return _Inert()
 
 
 strategies = _Strategies()

@@ -1,0 +1,54 @@
+"""Reusable multi-device subprocess harness for CPU-only test hosts.
+
+JAX fixes the device count at first backend init, so a test that needs an
+N-device mesh cannot force it inside the main pytest process (conftest.py
+already initialised a 1-device CPU backend). The pattern — shared by
+tests/test_sharded.py and tests/test_panel_sharded.py — is to run a small
+script in a SUBPROCESS with ``--xla_force_host_platform_device_count=N``
+set before jax imports, have the script print ONE JSON line as its last
+stdout line, and assert on the parsed record in the parent.
+
+Use the ``multidevice`` conftest fixture (preferred) or call
+:func:`run_multidevice` directly.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+SRC_DIR = os.path.abspath(
+    os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def run_multidevice(script: str, devices: int = 8, timeout: int = 540,
+                    env: dict | None = None):
+    """Run ``script`` in a fresh python on an N-device forced-host CPU
+    platform; return the parsed JSON from its LAST stdout line.
+
+    The child env gets XLA_FLAGS (device count), JAX_PLATFORMS=cpu and
+    PYTHONPATH=src pre-set, so scripts need no os.environ preamble."""
+    full_env = dict(os.environ)
+    flags = full_env.get("XLA_FLAGS", "")
+    full_env["XLA_FLAGS"] = (
+        f"{flags} --xla_force_host_platform_device_count={devices}".strip())
+    full_env["JAX_PLATFORMS"] = "cpu"
+    full_env["PYTHONPATH"] = (
+        SRC_DIR + os.pathsep + full_env["PYTHONPATH"]
+        if full_env.get("PYTHONPATH") else SRC_DIR)
+    if env:
+        full_env.update(env)
+    out = subprocess.run([sys.executable, "-c", script], env=full_env,
+                         capture_output=True, text=True, timeout=timeout)
+    assert out.returncode == 0, (
+        f"multidevice subprocess failed (rc={out.returncode}):\n"
+        f"{out.stderr[-4000:]}")
+    lines = [ln for ln in out.stdout.strip().splitlines() if ln.strip()]
+    assert lines, f"subprocess printed nothing; stderr:\n{out.stderr[-2000:]}"
+    try:
+        return json.loads(lines[-1])
+    except json.JSONDecodeError as e:  # pragma: no cover - debug aid
+        raise AssertionError(
+            f"last stdout line is not JSON: {lines[-1]!r}\n"
+            f"stderr:\n{out.stderr[-2000:]}") from e

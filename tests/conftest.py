@@ -9,5 +9,15 @@ sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 import jax  # noqa: E402
+import pytest  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture
+def multidevice():
+    """Run a script on an N-device forced-host CPU platform in a subprocess
+    and return its last-stdout-line JSON (see tests/_multidevice.py)."""
+    from _multidevice import run_multidevice
+    return run_multidevice
+

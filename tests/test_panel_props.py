@@ -1,0 +1,111 @@
+"""Property tests for the flat-panel engine (hypothesis; falls back to the
+offline ``_hypothesis_stub`` shim, which reports each property as SKIPPED).
+
+Covers the two contracts everything else leans on:
+
+* ``to_panel``/``from_panel`` is an exact round-trip for ANY mixed-dtype
+  agent-stacked pytree — odd leaf shapes, scalars-per-agent, duplicate
+  dtypes, bf16/f16/int32 groups (no silent promotion, no value change);
+* ``mix_dense`` with a doubly-stochastic W preserves the agent-mean of
+  every column (the invariant the paper's convergence analysis rests on)
+  and is an exact no-op for W = I.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # offline container: dev extra not installed
+    from _hypothesis_stub import given, settings, strategies as st
+
+from repro.core import panel as panel_mod
+
+DTYPES = ["float32", "bfloat16", "float16", "int32"]
+
+leaf_shapes = st.lists(
+    st.tuples(st.integers(1, 5), st.integers(0, 3)).map(
+        lambda t: tuple(np.random.default_rng(t[0] * 7 + t[1]).integers(
+            1, 8, size=t[1]))),
+    min_size=1, max_size=5)
+
+tree_strategy = st.fixed_dictionaries({
+    "m": st.integers(1, 6),
+    "shapes": leaf_shapes,
+    "dtypes": st.lists(st.sampled_from(DTYPES), min_size=5, max_size=5),
+    "seed": st.integers(0, 2**31 - 1),
+})
+
+
+def _build_tree(m, shapes, dtypes, seed):
+    rng = np.random.default_rng(seed)
+    tree = {}
+    for i, shp in enumerate(shapes):
+        dt = dtypes[i % len(dtypes)]
+        if dt == "int32":
+            arr = rng.integers(-100, 100, size=(m,) + shp).astype(np.int32)
+        else:
+            arr = rng.normal(size=(m,) + shp).astype(np.float32)
+        tree[f"leaf{i}"] = jnp.asarray(arr).astype(dt)
+    return tree
+
+
+def _doubly_stochastic(m, seed):
+    """Average of a few permutation matrices — exactly doubly stochastic."""
+    rng = np.random.default_rng(seed)
+    W = np.zeros((m, m))
+    n = 4
+    for _ in range(n):
+        W[np.arange(m), rng.permutation(m)] += 1.0 / n
+    return jnp.asarray(W, jnp.float32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(tree_strategy)
+def test_panel_roundtrip_exact(cfg):
+    tree = _build_tree(**cfg)
+    spec = panel_mod.make_spec(tree)
+    assert spec.rows == cfg["m"]
+    assert spec.width == sum(
+        int(np.prod(x.shape[1:])) for x in jax.tree.leaves(tree))
+    back = panel_mod.from_panel(panel_mod.to_panel(tree, spec), spec)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        assert bool(jnp.all(a == b))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 8), st.integers(1, 64), st.integers(0, 2**31 - 1))
+def test_mix_dense_preserves_agent_mean(m, d, seed):
+    rng = np.random.default_rng(seed)
+    pan = {"float32": jnp.asarray(rng.normal(size=(m, d)), jnp.float32)}
+    W = _doubly_stochastic(m, seed)
+    out = panel_mod.mix_dense(pan, W)
+    np.testing.assert_allclose(
+        np.mean(np.asarray(out["float32"], np.float64), axis=0),
+        np.mean(np.asarray(pan["float32"], np.float64), axis=0),
+        atol=1e-5, rtol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 8), st.integers(1, 64), st.integers(0, 2**31 - 1))
+def test_mix_dense_identity_is_noop(m, d, seed):
+    rng = np.random.default_rng(seed)
+    pan = {"float32": jnp.asarray(rng.normal(size=(m, d)), jnp.float32)}
+    out = panel_mod.mix_dense(pan, jnp.eye(m))
+    np.testing.assert_array_equal(np.asarray(out["float32"]),
+                                  np.asarray(pan["float32"]))
+
+
+@settings(max_examples=25, deadline=None)
+@given(tree_strategy)
+def test_global_merge_collapses_consensus(cfg):
+    tree = {k: v for k, v in _build_tree(**cfg).items()
+            if not jnp.issubdtype(v.dtype, jnp.integer)}
+    if not tree:
+        return
+    spec = panel_mod.make_spec(tree)
+    pan = panel_mod.to_panel(tree, spec)
+    merged = panel_mod.global_merge(pan)
+    assert float(panel_mod.consensus_distance(merged)) < 1e-2

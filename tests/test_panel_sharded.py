@@ -1,0 +1,220 @@
+"""Sharded flat-panel engine vs the per-leaf ``gossip.*_tree`` oracle.
+
+The (m, D) panel is row-sharded over ('pod','agent') and D-sharded over
+'fsdp' on the (1,2,2,2) debug training mesh (8 forced host devices in a
+subprocess — tests/_multidevice.py). Asserts:
+
+* fused ``mix_dense`` matches the tree oracle BIT-FOR-BIT in f32 (both
+  paths do the same f32-accumulating matmul; m=2 leaves no reassociation
+  freedom) and within bf16 tolerance in wire mode (the tree path casts W
+  to the wire dtype, the panel path keeps W f32 — intentionally different
+  rounding);
+* ``global_merge`` / ``consensus_distance`` match exactly;
+* the lowered fused mix carries fsdp-LOCAL collective traffic: nonzero,
+  but strictly less than a full-panel (replicated-D) exchange because
+  each fsdp shard only moves its own column slice;
+* the full ``make_panel_segment`` step compiles on the training-mesh
+  axes with nonzero collective bytes and reproduces the tree-state round
+  driver.
+
+The debug mesh mirrors make_training_mesh's ('pod','agent','fsdp','model')
+axes at CPU scale; launch/dryrun.py --variant panel runs the identical
+lowering on the full 256-chip mesh.
+"""
+import textwrap
+
+import pytest
+
+from _multidevice import run_multidevice
+
+PARITY_SCRIPT = textwrap.dedent("""
+    import json
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core import gossip, topology
+    from repro.core import panel as panel_mod
+    from repro.core.consensus import consensus_distance_tree
+    from repro.launch import mesh as mesh_mod
+    from repro.utils.hlo import collective_bytes
+
+    mesh = mesh_mod.make_debug_mesh(agents=2, fsdp=2, model=2)
+    m = 2
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    # mixed dtypes; f32 group width 128 and bf16 width 34 both divide the
+    # 2-way fsdp axis; the (m, 9) leaf makes the f32 offsets non-trivial
+    tree = {"w": jax.random.normal(ks[0], (m, 17, 7)),
+            "b": jax.random.normal(ks[1], (m, 9)),
+            "e": jax.random.normal(ks[2], (m, 34), jnp.bfloat16)}
+    spec = panel_mod.shard_spec(panel_mod.make_spec(tree), mesh)
+    pan = panel_mod.to_panel(tree, spec)
+    W = jnp.asarray(topology.random_matching(
+        m, 1.0, np.random.default_rng(0)), jnp.float32)
+
+    rec = {"pspecs": {k: str(ps) for k, ps in spec.pspecs},
+           "shardings": {k: str(v.sharding) for k, v in pan.items()}}
+
+    def max_err(a_tree, b_tree):
+        return max(float(jnp.max(jnp.abs(
+            a.astype(jnp.float32) - b.astype(jnp.float32))))
+            for a, b in zip(jax.tree.leaves(a_tree), jax.tree.leaves(b_tree)))
+
+    # fused sharded mix vs per-leaf oracle — f32 exact, bf16-wire approx
+    mix = jax.jit(lambda p, W: panel_mod.mix_dense(p, W, spec=spec))
+    rec["mix_err"] = max_err(panel_mod.from_panel(mix(pan, W), spec),
+                             gossip.mix_dense_tree(tree, W))
+    mix_bf16 = jax.jit(lambda p, W: panel_mod.mix_dense(
+        p, W, wire_dtype=jnp.bfloat16, spec=spec))
+    rec["mix_bf16_err"] = max_err(
+        panel_mod.from_panel(mix_bf16(pan, W), spec),
+        gossip.mix_dense_tree(tree, W, wire_dtype=jnp.bfloat16))
+
+    # merge + consensus monitor
+    gm = jax.jit(lambda p: panel_mod.global_merge(p, spec=spec))(pan)
+    rec["merge_err"] = max_err(panel_mod.from_panel(gm, spec),
+                               gossip.global_merge_tree(tree))
+    rec["consensus"] = float(jax.jit(
+        lambda p: panel_mod.consensus_distance(p, spec=spec))(pan))
+    rec["consensus_ref"] = float(consensus_distance_tree(tree))
+    mm = jax.jit(lambda p: panel_mod.merged(p, spec=spec))(pan)
+    rec["merged_err"] = max_err(panel_mod.from_panel(mm, spec, cast=False),
+                                gossip.merged_model_tree(tree))
+
+    # collective traffic of the lowered fused mix: fsdp-local
+    per_kind, total, counts = collective_bytes(
+        mix.lower(pan, W).compile().as_text())
+    rec["coll_bytes"] = total
+    rec["coll_kinds"] = sorted(per_kind)
+    rec["full_exchange_bytes"] = m * spec.wire_bytes
+    print(json.dumps(rec))
+""")
+
+SEGMENT_SCRIPT = textwrap.dedent("""
+    import json
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core import dsgd, topology
+    from repro.core import panel as panel_mod
+    from repro.launch import mesh as mesh_mod
+    from repro.optim import make_optimizer
+    from repro.utils.hlo import collective_bytes
+
+    mesh = mesh_mod.make_debug_mesh(agents=2, fsdp=2, model=2)
+    m, H, S, dim, classes = 2, 2, 3, 16, 4
+
+    def init_params(rng):
+        k1, _ = jax.random.split(rng)
+        return {"w": jax.random.normal(k1, (dim, classes)) * 0.1,
+                "b": jnp.zeros(classes)}
+
+    def loss_fn(p, batch, rng=None):
+        x, y = batch
+        lg = x @ p["w"] + p["b"]
+        nll = jnp.mean(jax.nn.logsumexp(lg, -1)
+                       - jnp.take_along_axis(lg, y[:, None], -1)[:, 0])
+        return nll, {}
+
+    opt = make_optimizer("adamw", 1e-2)
+    pstate, spec = dsgd.init_panel_state(init_params, opt, m,
+                                         jax.random.PRNGKey(0), mesh=mesh)
+    in_sh = (dsgd.panel_state_shardings(pstate, spec),
+             (NamedSharding(mesh, P(None, None, ("pod", "agent"))),) * 2,
+             NamedSharding(mesh, P()), NamedSharding(mesh, P()))
+    seg_fn = dsgd.make_panel_segment(loss_fn, opt, H, spec,
+                                     in_shardings=in_sh)
+    rng = np.random.default_rng(0)
+    Ws = jnp.asarray(np.stack([topology.random_matching(m, 1.0, rng)
+                               for _ in range(S)]), jnp.float32)
+    bx = jnp.asarray(rng.normal(size=(S, H, m, 8, dim)).astype(np.float32))
+    by = jnp.asarray(rng.integers(
+        0, classes, size=(S, H, m, 8)).astype(np.int32))
+    per_kind, total, counts = collective_bytes(
+        seg_fn.lower(pstate, (bx, by), Ws,
+                     jax.random.PRNGKey(1)).compile().as_text())
+
+    ps, mets = seg_fn(pstate, (bx, by), Ws, jax.random.PRNGKey(1))
+
+    # tree-state oracle on the SAME mesh: init_state(shardings=) places the
+    # agent-stacked leaves (and optimizer moments) row-wise on (pod, agent)
+    row_sh = NamedSharding(mesh, P(("pod", "agent")))
+    leaf_sh = {"w": row_sh, "b": row_sh}
+    ts = dsgd.init_state(init_params, opt, m, jax.random.PRNGKey(0),
+                         shardings=leaf_sh)
+    placed_ok = all(
+        x.sharding.is_equivalent_to(row_sh, x.ndim)
+        for x in list(jax.tree.leaves(ts["params"]))
+        + list(jax.tree.leaves({k: v for k, v in ts["opt"].items()
+                                if k in ("m", "v", "mu")})))
+    round_fn = jax.jit(dsgd.make_dsgd_round(loss_fn, opt, H))
+    rngs = jax.random.split(jax.random.PRNGKey(1), S)
+    for t in range(S):
+        ts, mets_t = round_fn(ts, (bx[t], by[t]), Ws[t], rngs[t])
+    final = panel_mod.from_panel(ps["panel"], spec)
+    err = max(float(jnp.max(jnp.abs(a - b))) for a, b in
+              zip(jax.tree.leaves(final), jax.tree.leaves(ts["params"])))
+    print(json.dumps({
+        "pspecs": {k: str(p) for k, p in spec.pspecs},
+        "coll_bytes": total, "coll_kinds": sorted(per_kind),
+        "param_err": err,
+        "loss_gap": abs(float(mets["loss"][-1]) - float(mets_t["loss"])),
+        "consensus_gap": abs(float(mets["consensus"][-1])
+                             - float(mets_t["consensus"])),
+        "tree_state_placed": placed_ok,
+        "step": int(ps["step"])}))
+""")
+
+
+@pytest.fixture(scope="module")
+def parity():
+    return run_multidevice(PARITY_SCRIPT, devices=8, timeout=420)
+
+
+@pytest.fixture(scope="module")
+def segment():
+    return run_multidevice(SEGMENT_SCRIPT, devices=8, timeout=420)
+
+
+@pytest.mark.multidevice
+class TestShardedPanelParity:
+    def test_spec_shards_rows_and_columns(self, parity):
+        # both dtype groups divide the mesh axes, so both shard fully
+        assert parity["pspecs"]["float32"] == \
+            "PartitionSpec(('pod', 'agent'), 'fsdp')"
+        assert parity["pspecs"]["bfloat16"] == \
+            "PartitionSpec(('pod', 'agent'), 'fsdp')"
+
+    def test_mix_dense_bitwise_f32(self, parity):
+        assert parity["mix_err"] == 0.0
+
+    def test_mix_dense_bf16_wire_tolerance(self, parity):
+        assert 0.0 <= parity["mix_bf16_err"] < 2e-2
+
+    def test_global_merge_and_merged_model(self, parity):
+        assert parity["merge_err"] == 0.0
+        assert parity["merged_err"] == 0.0
+
+    def test_consensus_distance(self, parity):
+        assert parity["consensus"] == pytest.approx(
+            parity["consensus_ref"], rel=1e-6)
+
+    def test_collectives_are_fsdp_local(self, parity):
+        # nonzero traffic on the agent axis, but strictly less than a
+        # replicated-D exchange: each fsdp shard moves only its columns
+        assert parity["coll_bytes"] > 0
+        assert parity["coll_bytes"] < parity["full_exchange_bytes"]
+        assert parity["coll_kinds"]
+
+
+@pytest.mark.multidevice
+class TestShardedPanelSegment:
+    def test_segment_compiles_with_collectives(self, segment):
+        assert segment["coll_bytes"] > 0
+        assert segment["coll_kinds"]
+
+    def test_segment_matches_tree_round_driver(self, segment):
+        assert segment["param_err"] < 1e-6
+        assert segment["loss_gap"] < 1e-6
+        assert segment["consensus_gap"] < 1e-5
+        assert segment["step"] == 6  # S * H
+
+    def test_init_state_places_tree_leaves(self, segment):
+        # dsgd.init_state(shardings=...) put params + moments on the mesh
+        assert segment["tree_state_placed"]

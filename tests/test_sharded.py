@@ -1,18 +1,13 @@
 """Sharded-lowering integration test: a scaled-down version of the dry-run
-(8 host devices in a SUBPROCESS so the main test process keeps 1 device).
-Asserts lower+compile succeeds for a reduced arch on a (1,2,2,2) training
-mesh and that the collective parser finds traffic."""
-import json
-import os
-import subprocess
-import sys
+(8 host devices via the tests/_multidevice.py subprocess harness, so the
+main test process keeps 1 device). Asserts lower+compile succeeds for a
+reduced arch on a (1,2,2,2) training mesh and that the collective parser
+finds traffic."""
 import textwrap
 
 import pytest
 
 SCRIPT = textwrap.dedent("""
-    import os
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import json, dataclasses
     import jax, jax.numpy as jnp
     from jax.sharding import NamedSharding, PartitionSpec as P
@@ -72,14 +67,9 @@ SCRIPT = textwrap.dedent("""
 
 
 @pytest.mark.slow
-def test_sharded_train_step_lowers_and_has_collectives():
-    env = dict(os.environ)
-    env["PYTHONPATH"] = os.path.abspath(
-        os.path.join(os.path.dirname(__file__), "..", "src"))
-    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
-                         capture_output=True, text=True, timeout=540)
-    assert out.returncode == 0, out.stderr[-2000:]
-    rec = json.loads(out.stdout.strip().splitlines()[-1])
+@pytest.mark.multidevice
+def test_sharded_train_step_lowers_and_has_collectives(multidevice):
+    rec = multidevice(SCRIPT, devices=8, timeout=540)
     assert rec["ok"]
     assert rec["coll_bytes"] > 0  # gossip + TP collectives present
     assert rec["flops"] > 0
