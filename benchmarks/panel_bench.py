@@ -23,6 +23,19 @@ records its us_per_round + the per-round collective bytes of the lowered
 scan next to the replicated numbers (merged into BENCH_panel.json under
 "sharded"). Needs 8 host devices; when the process has fewer it re-execs
 itself in a subprocess with ``--xla_force_host_platform_device_count``.
+
+Both panel engines run the consensus monitor FOLDED into the mixing
+matmul (panel.mix_dense_mean: W augmented with a 1^T/m row, the mean read
+off the extra output row, consensus_from_mean finishing with one deviation
+pass) — no separate full-panel mean reduce per round.
+
+``--wire {f32,bf16,int8,int8_ef,all}`` benches the quantized-wire codec
+subsystem (repro/wire) on the default olmo-1b-family size: per codec it
+records the codec-aware wire bytes/agent/round (PanelSpec.wire_bytes),
+the bytes ratio vs f32, us_per_round, and the final-single-global-merge
+parity vs the f32 run — merged into BENCH_panel.json under "wire". The
+f32 codec row is asserted BIT-exact against the no-policy engine (the
+identity codec must not perturb the pre-codec path).
 """
 from __future__ import annotations
 
@@ -87,11 +100,12 @@ def bench_size(m, d_model, layers, vocab, rounds, reps=3):
         jax.block_until_ready(jax.tree.leaves(merged)[0])
         return xi
 
-    # ---- fused panel path: one donated, scanned dispatch per segment
+    # ---- fused panel path: one donated, scanned dispatch per segment;
+    # consensus mean folded into the mixing matmul (no separate reduce)
     def seg(pan, Ws):
         def body(p, W):
-            mixed = panel_mod.mix_dense(p, W)
-            return mixed, panel_mod.consensus_distance(mixed)
+            mixed, mean, _ = panel_mod.mix_dense_mean(p, W)
+            return mixed, panel_mod.consensus_from_mean(mixed, mean)
         pan, xis = jax.lax.scan(body, pan, Ws)
         return panel_mod.global_merge(pan), xis
 
@@ -159,9 +173,9 @@ def bench_sharded(m=16, d_model=256, layers=8, vocab=512, rounds=8, reps=3):
     def make_seg(use_spec):
         def seg(pan, Ws):
             def body(p, W):
-                mixed = panel_mod.mix_dense(p, W, spec=use_spec)
-                return mixed, panel_mod.consensus_distance(mixed,
-                                                           spec=use_spec)
+                mixed, mean, _ = panel_mod.mix_dense_mean(p, W,
+                                                          spec=use_spec)
+                return mixed, panel_mod.consensus_from_mean(mixed, mean)
             pan, xis = jax.lax.scan(body, pan, Ws)
             return panel_mod.global_merge(pan, spec=use_spec), xis
         return jax.jit(seg, donate_argnums=(0,))
@@ -210,6 +224,111 @@ def bench_sharded(m=16, d_model=256, layers=8, vocab=512, rounds=8, reps=3):
             "xi_parity_gap": round(abs(xi_repl - xi_shard), 6)}
 
 
+WIRE_CODECS = ("f32", "bf16", "int8", "int8_ef")
+
+# documented tolerance for the int8 final-merge parity on the olmo-1b
+# reduced config: quantization error per element is <= one per-row scale
+# (amax/127), and both gossip mixing and the global merge are convex
+# combinations of rows, so the merged-model deviation stays O(scale).
+WIRE_MERGE_TOL = 0.05
+
+
+def bench_wire(codecs, m=16, d_model=256, layers=8, vocab=512, rounds=8,
+               reps=3):
+    """Fused panel segment per wire codec on the default olmo-1b-family
+    size: codec-aware payload bytes + runtime + final-merge parity vs the
+    f32 identity codec. Returns the records keyed by codec name (merged
+    into BENCH_panel.json["wire"])."""
+    from repro import wire as wire_mod
+
+    tree = _make_tree(m, d_model, layers, vocab)
+    base_spec = panel_mod.make_spec(tree)
+    Ws = jnp.asarray(np.stack([
+        topology.random_matching(m, 0.5, np.random.default_rng(t))
+        for t in range(rounds)]), jnp.float32)
+    wire_key = jax.random.PRNGKey(7)
+
+    def make_seg(spec, codec):
+        ef = codec is not None and codec.error_feedback
+
+        def seg(pan, err, Ws, key):
+            def body(carry, xs):
+                p, e = carry
+                W, k = xs
+                kw = dict(spec=spec, key=k)
+                if ef:
+                    mixed, mean, e = panel_mod.mix_dense_mean(
+                        p, W, err=e, **kw)
+                else:
+                    mixed, mean, _ = panel_mod.mix_dense_mean(p, W, **kw)
+                return (mixed, e), panel_mod.consensus_from_mean(mixed,
+                                                                 mean)
+            keys = jax.random.split(key, Ws.shape[0])
+            (pan, err), xis = jax.lax.scan(body, (pan, err), (Ws, keys))
+            merge_key = jax.random.fold_in(key, Ws.shape[0])
+            if ef:  # final exchange transmits Q(x + e): residual included
+                merged, _ = panel_mod.global_merge(pan, spec=spec,
+                                                   key=merge_key, err=err)
+                return merged, xis
+            return panel_mod.global_merge(pan, spec=spec,
+                                          key=merge_key), xis
+        return jax.jit(seg, donate_argnums=(0, 1))
+
+    def fresh(codec):
+        pan = {k: v + 0.0
+               for k, v in panel_mod.to_panel(tree, base_spec).items()}
+        err = ({k: jnp.zeros_like(v, jnp.float32) for k, v in pan.items()}
+               if codec is not None and codec.error_feedback else None)
+        jax.block_until_ready(list(pan.values()))
+        return pan, err
+
+    def run(fn, codec):
+        pan, err = fresh(codec)
+        t0 = time.perf_counter()
+        merged, xis = fn(pan, err, Ws, wire_key)
+        jax.device_get(xis)
+        jax.block_until_ready(list(merged.values()))
+        return merged, time.perf_counter() - t0
+
+    def clock(fn, codec):
+        ts, merged = [], None
+        for _ in range(reps):
+            merged, dt = run(fn, codec)
+            ts.append(dt)
+        return merged, min(ts) / rounds * 1e6
+
+    # no-policy engine: the pre-codec bit-exactness reference for f32
+    merged_plain, _ = run(make_seg(base_spec, None), None)
+
+    out = {}
+    f32 = None
+    for name in ("f32",) + tuple(c for c in codecs if c != "f32"):
+        codec = wire_mod.get_codec(name)
+        spec = panel_mod.with_wire(base_spec, name)
+        merged, us = clock(make_seg(spec, codec), codec)
+        if name == "f32":
+            f32 = {"merged": merged, "us": us, "bytes": spec.wire_bytes}
+            gap = max(float(jnp.max(jnp.abs(a - merged_plain[k])))
+                      for k, a in merged.items())
+            assert gap == 0.0, (
+                f"f32 identity codec perturbed the engine (max err {gap})")
+        merge_err = max(
+            float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                  - f32["merged"][k].astype(jnp.float32))))
+            for k, a in merged.items())
+        assert merge_err <= WIRE_MERGE_TOL, (name, merge_err)
+        out[name] = {
+            "wire_bytes_per_agent": spec.wire_bytes,
+            "bytes_ratio_vs_f32": round(f32["bytes"] / spec.wire_bytes, 2),
+            "us_per_round": round(us, 1),
+            "speedup_vs_f32": round(f32["us"] / us, 2),
+            "merge_max_err_vs_f32": round(merge_err, 6),
+            "merge_tol": WIRE_MERGE_TOL,
+        }
+    return {"backend": jax.default_backend(), "m": m, "D": base_spec.width,
+            "rounds": rounds, "codecs": out}
+
+
 def _load_existing():
     if os.path.exists("BENCH_panel.json"):
         with open("BENCH_panel.json") as f:
@@ -222,6 +341,11 @@ def main():
     ap.add_argument("--sharded", action="store_true",
                     help="bench the fsdp-sharded panel on the debug mesh "
                          "(re-execs with forced host devices if needed)")
+    ap.add_argument("--wire", choices=WIRE_CODECS + ("all",),
+                    help="bench a wire codec (repro.wire) against the f32 "
+                         "identity: codec-aware bytes/agent/round + "
+                         "runtime + final-merge parity ('all' runs every "
+                         "codec)")
     args = ap.parse_args()
 
     if args.sharded and jax.device_count() < SHARDED_DEVICES:
@@ -230,15 +354,27 @@ def main():
                             " --xla_force_host_platform_device_count="
                             f"{SHARDED_DEVICES}").strip()
         env.setdefault("JAX_PLATFORMS", "cpu")
-        raise SystemExit(subprocess.run(
-            [sys.executable, "-m", "benchmarks.panel_bench", "--sharded"],
-            env=env).returncode)
+        argv = [sys.executable, "-m", "benchmarks.panel_bench", "--sharded"]
+        if args.wire:  # keep a combined --sharded --wire request intact
+            argv += ["--wire", args.wire]
+        raise SystemExit(subprocess.run(argv, env=env).returncode)
 
     out = _load_existing()
     out.setdefault("description",
                    "fused panel gossip+merge round vs per-leaf tree-map "
                    "path (us_per_round)")
 
+    if args.wire:
+        names = WIRE_CODECS if args.wire == "all" else (args.wire,)
+        rec = bench_wire(names, **SIZES["default"])
+        wire = out.setdefault("wire", {})
+        wire.update({k: v for k, v in rec.items() if k != "codecs"})
+        wire.setdefault("codecs", {}).update(rec["codecs"])
+        for name, r in rec["codecs"].items():
+            print(f"wire {name}: {r['wire_bytes_per_agent']}B/agent "
+                  f"({r['bytes_ratio_vs_f32']}x vs f32) "
+                  f"{r['us_per_round']:.0f}us/round "
+                  f"merge_err={r['merge_max_err_vs_f32']}", flush=True)
     if args.sharded:
         out["sharded"] = bench_sharded(**{k: v for k, v in
                                           SIZES["default"].items()})
@@ -246,7 +382,7 @@ def main():
         print(f"sharded: replicated={r['us_per_round_replicated']:.0f}us "
               f"fsdp-sharded={r['us_per_round_sharded']:.0f}us "
               f"coll={r['coll_bytes_per_round']}B/round", flush=True)
-    else:
+    if not args.wire and not args.sharded:  # default: the sizes sweep
         out["backend"] = jax.default_backend()  # labels the "sizes" runs
         out.setdefault("sizes", {})
         for name, kw in SIZES.items():

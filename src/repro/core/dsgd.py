@@ -32,6 +32,7 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from repro import wire as wire_mod
 from repro.core import gossip
 from repro.core import panel as panel_mod
 from repro.core.consensus import consensus_distance_tree
@@ -75,17 +76,53 @@ def init_state(init_params: Callable, optimizer: Optimizer, m: int, rng,
             "step": jnp.zeros((), jnp.int32)}
 
 
-def _mix(params, W, impl: str, wire_dtype):
+# fold_in tag deriving the wire-codec key from a round's rng WITHOUT
+# disturbing the local-step key schedule (so f32/bf16 runs stay bit-exact
+# with the pre-codec engine, and idle rounds under any codec match them)
+_WIRE_KEY_TAG = 0x77697265  # "wire"
+
+
+def _wire_key(rng, needed: bool):
+    return jax.random.fold_in(rng, _WIRE_KEY_TAG) if needed else None
+
+
+def _tree_wire_check(wire) -> bool:
+    """Validate a codec name for the tree-state drivers at build time
+    (error feedback needs the panel engine's residual state); returns
+    whether the codec draws a stochastic-rounding key."""
+    if wire is None:
+        return False
+    codec = wire_mod.get_codec(wire)
+    if codec.error_feedback:
+        raise ValueError(
+            f"codec '{codec.name}' needs an error-feedback residual; the "
+            "tree-state drivers carry none — use the panel engine "
+            "(make_panel_segment + init_panel_state(wire=...)) or 'int8'")
+    return codec.needs_key
+
+
+def _mix(params, W, impl: str, wire_dtype, wire=None, key=None):
     # Per-leaf mixing: tree-state steps are the sharding-aware reference
     # path (see module docstring); the fused panel path is make_panel_segment.
     # For impl == "pairwise" the step's W argument IS the (m,) int32
     # partner array (see topology.partner_array), not an (m, m) matrix.
     if impl == "dense":
-        return gossip.mix_dense_tree(params, W, wire_dtype)
+        if wire_dtype is None and wire is None:
+            return gossip.mix_dense_tree(params, W)
+        # W == I rounds communicate nothing, so no codec may touch the
+        # state (mirrors the panel engine's idle guard; pairwise idles
+        # per-row inside mix_pairwise_tree)
+        m = jax.tree.leaves(params)[0].shape[0]
+        idle = jnp.all(W == jnp.eye(m, dtype=W.dtype))
+        return jax.lax.cond(
+            idle, lambda p: p,
+            lambda p: gossip.mix_dense_tree(p, W, wire_dtype, wire, key),
+            params)
     if impl == "pairwise":
-        return gossip.mix_pairwise_tree(params, W, wire_dtype=wire_dtype)
+        return gossip.mix_pairwise_tree(params, W, wire_dtype=wire_dtype,
+                                        wire=wire, key=key)
     if impl == "merge":
-        return gossip.global_merge_tree(params, wire_dtype)
+        return gossip.global_merge_tree(params, wire_dtype, wire, key)
     if impl == "none":
         return params
     raise ValueError(impl)
@@ -93,12 +130,17 @@ def _mix(params, W, impl: str, wire_dtype):
 
 def make_dsgd_step(loss_fn: Callable, optimizer: Optimizer, *,
                    gossip_impl: str = "dense",
-                   wire_dtype=None, monitor: bool = True):
+                   wire_dtype=None, wire=None, monitor: bool = True):
     """One communication round with ONE local step per agent.
 
     step(state, batch, W, rng) -> (state, metrics); batch leaves (m, b, ...).
     With gossip_impl="pairwise", pass the (m,) int32 partner array as W.
+    ``wire`` names a codec from repro.wire for the gossip payload (the
+    stochastic int8 codecs draw their key from the step rng via fold_in).
+    Error-feedback codecs are panel-engine-only (the tree state carries
+    no residual) and are refused here.
     """
+    needs_key = _tree_wire_check(wire)
 
     def step(state, batch, W, rng):
         m = jax.tree.leaves(state["params"])[0].shape[0]
@@ -111,7 +153,8 @@ def make_dsgd_step(loss_fn: Callable, optimizer: Optimizer, *,
         grads, losses = jax.vmap(one)(state["params"], batch, rngs)
         new_p, new_opt = jax.vmap(optimizer.update)(
             grads, state["opt"], state["params"])
-        mixed = _mix(new_p, W, gossip_impl, wire_dtype)
+        mixed = _mix(new_p, W, gossip_impl, wire_dtype, wire,
+                     _wire_key(rng, needs_key))
         metrics = {"loss": jnp.mean(losses)}
         if monitor:
             gbar = jax.tree.map(lambda g: jnp.mean(g, axis=0), grads)
@@ -126,11 +169,13 @@ def make_dsgd_step(loss_fn: Callable, optimizer: Optimizer, *,
 
 def make_dsgd_round(loss_fn: Callable, optimizer: Optimizer, local_steps: int,
                     *, gossip_impl: str = "dense", wire_dtype=None,
-                    monitor: bool = True):
+                    wire=None, monitor: bool = True):
     """One communication round with H local steps (paper: H=100).
 
     step(state, batches, W, rng): batches leaves (H, m, b, ...) — scanned.
+    ``wire`` as in :func:`make_dsgd_step` (error-feedback codecs refused).
     """
+    needs_key = _tree_wire_check(wire)
 
     def round_fn(state, batches, W, rng):
         m = jax.tree.leaves(state["params"])[0].shape[0]
@@ -155,7 +200,8 @@ def make_dsgd_round(loss_fn: Callable, optimizer: Optimizer, local_steps: int,
         rngs = jax.random.split(rng, local_steps)
         (p, o), (losses, gns) = jax.lax.scan(
             body, (state["params"], state["opt"]), (batches, rngs))
-        mixed = _mix(p, W, gossip_impl, wire_dtype)
+        mixed = _mix(p, W, gossip_impl, wire_dtype, wire,
+                     _wire_key(rng, needs_key))
         metrics = {"loss": jnp.mean(losses), "grad_norm": gns[-1]}
         if monitor:
             metrics["consensus"] = consensus_distance_tree(mixed)
@@ -174,8 +220,17 @@ def make_dsgd_round(loss_fn: Callable, optimizer: Optimizer, local_steps: int,
 _MOMENT_KEYS = ("m", "v", "mu")
 
 
+def _wire_needs_ef(spec) -> bool:
+    return any(wire_mod.get_codec(name).error_feedback
+               for _, name in spec.wire)
+
+
+def _wire_needs_key(spec) -> bool:
+    return any(wire_mod.get_codec(name).needs_key for _, name in spec.wire)
+
+
 def init_panel_state(init_params: Callable, optimizer: Optimizer, m: int,
-                     rng, same_init: bool = False, mesh=None):
+                     rng, same_init: bool = False, mesh=None, wire=None):
     """Panel train state: params AND optimizer moments as per-dtype (m, D)
     panels. Returns (state, spec); the static spec is what turns panels
     back into model pytrees. The optimizer transforms are elementwise, so
@@ -183,19 +238,32 @@ def init_panel_state(init_params: Callable, optimizer: Optimizer, m: int,
 
     ``mesh`` shards the panels: rows over ('pod','agent'), D over 'fsdp'
     (panel_mod.shard_spec); the optimizer-moment panels mirror the
-    parameter panel layout exactly."""
+    parameter panel layout exactly.
+
+    ``wire`` attaches a wire-codec policy to the spec (panel_mod.with_wire:
+    a codec name for every dtype group, or a per-group dict). An
+    error-feedback codec adds ``state["wire_err"]`` — one zero-initialised
+    f32 residual panel per dtype group, laid out exactly like the
+    parameter panel and donated through the segment scan."""
     params = _init_agent_params(init_params, m, rng, same_init)
     spec = panel_mod.make_spec(params)
     if mesh is not None:
         spec = panel_mod.shard_spec(spec, mesh)
+    if wire is not None:
+        spec = panel_mod.with_wire(spec, wire)
     pan = panel_mod.to_panel(params, spec)
     opt_state = jax.vmap(optimizer.init)(pan)
     if spec.sharded:
         opt_state = {k: (panel_mod.shard_panel(v, spec)
                          if k in _MOMENT_KEYS else v)
                      for k, v in opt_state.items()}
-    return {"panel": pan, "opt": opt_state,
-            "step": jnp.zeros((), jnp.int32)}, spec
+    state = {"panel": pan, "opt": opt_state,
+             "step": jnp.zeros((), jnp.int32)}
+    if _wire_needs_ef(spec):
+        state["wire_err"] = panel_mod.shard_panel(
+            {k: jnp.zeros(v.shape, jnp.float32) for k, v in pan.items()},
+            spec)
+    return state, spec
 
 
 def panel_state_shardings(state, spec):
@@ -214,19 +282,29 @@ def panel_state_shardings(state, spec):
     opt = {k: (group_sh(v) if k in _MOMENT_KEYS
                else jax.tree.map(lambda _: repl, v))
            for k, v in state["opt"].items()}
-    return {"panel": group_sh(state["panel"]), "opt": opt, "step": repl}
+    out = {"panel": group_sh(state["panel"]), "opt": opt, "step": repl}
+    if "wire_err" in state:
+        out["wire_err"] = group_sh(state["wire_err"])
+    return out
 
 
 def panelize_state(state, spec):
-    """Tree state (init_state) -> panel state (same numbers)."""
+    """Tree state (init_state) -> panel state (same numbers). A spec with
+    an error-feedback wire policy gets a fresh zero residual panel."""
     opt = {k: (panel_mod.to_panel(v, spec) if k in _MOMENT_KEYS else v)
            for k, v in state["opt"].items()}
-    return {"panel": panel_mod.to_panel(state["params"], spec), "opt": opt,
-            "step": state["step"]}
+    pan = panel_mod.to_panel(state["params"], spec)
+    out = {"panel": pan, "opt": opt, "step": state["step"]}
+    if _wire_needs_ef(spec):
+        out["wire_err"] = panel_mod.shard_panel(
+            {k: jnp.zeros(v.shape, jnp.float32) for k, v in pan.items()},
+            spec)
+    return out
 
 
 def unpanelize_state(state, spec):
-    """Panel state -> tree state (same numbers)."""
+    """Panel state -> tree state (same numbers; the wire_err residual is a
+    panel-engine carry and is dropped)."""
     opt = {k: (panel_mod.from_panel(v, spec) if k in _MOMENT_KEYS else v)
            for k, v in state["opt"].items()}
     return {"params": panel_mod.from_panel(state["panel"], spec), "opt": opt,
@@ -253,6 +331,23 @@ def make_panel_segment(loss_fn: Callable, optimizer: Optimizer,
     scheduler (W=I for idle rounds, fully-connected for merge rounds), so
     a segment needs no host-side dispatch on the round kind.
 
+    **Wire codecs.** The spec's wire policy (panel_mod.with_wire /
+    init_panel_state(wire=...)) compresses the gossip payload; the legacy
+    ``wire_dtype`` cast survives as an explicit override (not both). A
+    stochastic codec (int8) draws its per-round key by folding a fixed tag
+    into the round rng, so the local-step key schedule — and therefore any
+    non-stochastic run — is bit-identical to the pre-codec engine. An
+    error-feedback codec (int8_ef) carries ``state["wire_err"]`` (from
+    init_panel_state) through the scan as one more donated panel; it is
+    updated only on communicating rounds.
+
+    **Folded consensus.** With ``monitor=True`` the per-round consensus
+    mean rides the mixing matmul itself (an extra 1^T/m row on W —
+    panel_mod.mix_dense_mean), so the monitor costs one deviation pass
+    instead of a second full mean reduce. Idle (W == I) rounds skip the
+    matmul entirely — no payload travels, no codec touches the state —
+    and keep the standalone consensus_distance reduce.
+
     ``active`` lets the host pad a PARTIAL tail segment up to the common
     segment length instead of retracing/recompiling the whole scan for a
     one-off smaller S: rounds with ``active[s] == False`` are full no-ops
@@ -266,6 +361,11 @@ def make_panel_segment(loss_fn: Callable, optimizer: Optimizer,
     the model params, agent-stacked) re-pins the rebuilt per-leaf params
     for the grad compute; ``in_shardings`` is forwarded to jax.jit for
     lowering against ShapeDtypeStructs."""
+    if wire_dtype is not None and spec.wire:
+        raise ValueError("pass either wire_dtype= (legacy cast) or a spec "
+                         "wire policy (with_wire), not both")
+    needs_key = wire_dtype is None and _wire_needs_key(spec)
+    needs_ef = wire_dtype is None and _wire_needs_ef(spec)
 
     def one(p, b, r):
         (l, aux), g = jax.value_and_grad(loss_fn, has_aux=True)(p, b, r)
@@ -274,6 +374,11 @@ def make_panel_segment(loss_fn: Callable, optimizer: Optimizer,
     def segment(state, batches, Ws, rng, active=None):
         m = next(iter(state["panel"].values())).shape[0]
         S = Ws.shape[0]
+        if needs_ef and "wire_err" not in state:
+            raise ValueError(
+                "spec's wire policy uses error feedback but the state has "
+                "no 'wire_err' residual panel; build the state with "
+                "init_panel_state(..., wire=...)")
 
         def local_body(carry, xs):
             pan, opt = carry
@@ -288,27 +393,47 @@ def make_panel_segment(loss_fn: Callable, optimizer: Optimizer,
             return (new_pan, new_opt), (jnp.mean(losses), gn)
 
         def run_round(carry, W, batch_r, r):
-            pan, opt = carry
+            pan, opt, werr = carry
             rs = jax.random.split(r, local_steps)
             (pan, opt), (losses, gns) = jax.lax.scan(
                 local_body, (pan, opt), (batch_r, rs))
+            wkey = _wire_key(r, needs_key)
             # W == I rounds communicate nothing: skip the matmul AND the
-            # wire cast (a bf16 wire must not quantize idle rounds —
-            # there is no payload on the wire to compress)
+            # codec (no payload travels, so nothing may be quantized and
+            # the error-feedback residual must pass through untouched)
             idle = jnp.all(W == jnp.eye(m, dtype=W.dtype))
-            mixed = jax.lax.cond(
-                idle, lambda p: p,
-                lambda p: panel_mod.mix_dense(p, W, wire_dtype=wire_dtype,
-                                              use_pallas=use_pallas,
-                                              interpret=interpret,
-                                              spec=spec),
-                pan)
-            mets = {"loss": jnp.mean(losses), "grad_norm": gns[-1]}
+            kw = dict(wire_dtype=wire_dtype, use_pallas=use_pallas,
+                      interpret=interpret, spec=spec, key=wkey)
+
             if monitor:
-                mets["consensus"] = panel_mod.consensus_distance(
-                    mixed, use_pallas=use_pallas, interpret=interpret,
-                    spec=spec)
-            return (mixed, opt), mets
+                def comm(args):
+                    p, e = args
+                    mixed, mean, ne = panel_mod.mix_dense_mean(
+                        p, W, err=e, **kw)
+                    return mixed, ne, panel_mod.consensus_from_mean(
+                        mixed, mean)
+
+                def idle_fn(args):
+                    p, e = args
+                    return p, e, panel_mod.consensus_distance(
+                        p, use_pallas=use_pallas, interpret=interpret,
+                        spec=spec)
+
+                mixed, werr, xi = jax.lax.cond(
+                    idle, idle_fn, comm, (pan, werr))
+                mets = {"loss": jnp.mean(losses), "grad_norm": gns[-1],
+                        "consensus": xi}
+            else:
+                def comm(args):
+                    p, e = args
+                    if needs_ef:
+                        return panel_mod.mix_dense(p, W, err=e, **kw)
+                    return panel_mod.mix_dense(p, W, **kw), e
+
+                mixed, werr = jax.lax.cond(
+                    idle, lambda a: a, comm, (pan, werr))
+                mets = {"loss": jnp.mean(losses), "grad_norm": gns[-1]}
+            return (mixed, opt, werr), mets
 
         def round_body(carry, xs):
             if active is None:
@@ -329,12 +454,15 @@ def make_panel_segment(loss_fn: Callable, optimizer: Optimizer,
         rngs = jax.random.split(rng, S)
         xs = ((Ws, batches, rngs) if active is None
               else (Ws, batches, rngs, active))
-        (pan, opt), metrics = jax.lax.scan(
-            round_body, (state["panel"], state["opt"]), xs)
+        werr0 = state.get("wire_err") if needs_ef else None
+        (pan, opt, werr), metrics = jax.lax.scan(
+            round_body, (state["panel"], state["opt"], werr0), xs)
         steps = (S if active is None
                  else jnp.sum(active.astype(jnp.int32))) * local_steps
-        return ({"panel": pan, "opt": opt,
-                 "step": state["step"] + steps}, metrics)
+        out = {"panel": pan, "opt": opt, "step": state["step"] + steps}
+        if werr is not None:
+            out["wire_err"] = werr
+        return out, metrics
 
     jit_kw = {} if in_shardings is None else {"in_shardings": in_shardings}
     return jax.jit(segment, donate_argnums=(0,) if donate else (), **jit_kw)

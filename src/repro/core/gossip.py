@@ -17,7 +17,14 @@ per dtype group instead of one op per leaf:
   all-reduce, O(P) ring bytes) broadcast back.
 
 ``wire_dtype`` optionally casts parameters to bf16 for the communication
-only (beyond-paper compression lever; see EXPERIMENTS.md §Perf).
+only (beyond-paper compression lever; see EXPERIMENTS.md §Perf). ``wire``
+(a codec name from repro.wire — 'f32', 'bf16', 'int8', 'int8_ef') routes
+the payload through the quantized-wire codec subsystem instead; the
+stochastic int8 codecs need an explicit ``key``. On the per-leaf ``*_tree``
+path codecs apply leaf-by-leaf (each leaf reshaped to its (m, size) panel,
+so int8 scales are per-agent-per-LEAF — finer than the panel engine's
+per-agent-per-dtype-group scales; the two paths agree exactly only for
+scale-free codecs like f32/bf16).
 
 The per-leaf originals survive as ``*_tree``: they are the reference the
 panel path is validated/benchmarked against, and the right lowering when
@@ -26,41 +33,50 @@ where concatenating differently-sharded leaves would force resharding).
 """
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
+from repro import wire as wire_mod
 from repro.core import panel as panel_mod
-from repro.core.panel import _wire  # shared wire-cast helper
 
 
-def _via_panel(op, params):
+def _via_panel(op, params, wire=None):
     spec = panel_mod.make_spec(params)
-    return panel_mod.from_panel(op(panel_mod.to_panel(params, spec)), spec)
+    if wire is not None:
+        if wire_mod.get_codec(wire).error_feedback:
+            raise ValueError(
+                f"codec '{wire}' needs an error-feedback residual, which "
+                "these stateless wrappers cannot carry; use the panel "
+                "engine (dsgd.make_panel_segment) or 'int8'")
+        spec = panel_mod.with_wire(spec, wire)
+    return panel_mod.from_panel(op(panel_mod.to_panel(params, spec), spec),
+                                spec)
 
 
-def mix_dense(params, W, wire_dtype=None):
+def mix_dense(params, W, wire_dtype=None, wire=None, key=None):
     """Theta <- W Theta  (row k: sum_l W[k,l] theta_l) — one fused matmul
     per dtype group over the flattened panel."""
     return _via_panel(
-        lambda p: panel_mod.mix_dense(p, W, wire_dtype=wire_dtype), params)
+        lambda p, s: panel_mod.mix_dense(p, W, wire_dtype=wire_dtype,
+                                         spec=s, key=key), params, wire)
 
 
-def mix_pairwise(params, partner, weight=0.5, wire_dtype=None):
+def mix_pairwise(params, partner, weight=0.5, wire_dtype=None, wire=None,
+                 key=None):
     """theta_k <- (1-w) theta_k + w theta_{partner[k]}; partner: (m,) int32.
 
     partner[k] == k means agent k idles this round (no communication)."""
     return _via_panel(
-        lambda p: panel_mod.mix_pairwise(p, partner, weight,
-                                         wire_dtype=wire_dtype), params)
+        lambda p, s: panel_mod.mix_pairwise(p, partner, weight,
+                                            wire_dtype=wire_dtype,
+                                            spec=s, key=key), params, wire)
 
 
-def global_merge(params, wire_dtype=None):
+def global_merge(params, wire_dtype=None, wire=None, key=None):
     """Single global merging: theta_k <- mean_l theta_l for every k."""
     return _via_panel(
-        lambda p: panel_mod.global_merge(p, wire_dtype=wire_dtype), params)
+        lambda p, s: panel_mod.global_merge(p, wire_dtype=wire_dtype,
+                                            spec=s, key=key), params, wire)
 
 
 def merged_model(params):
@@ -75,31 +91,93 @@ def merged_model(params):
 # ---------------------------------------------------------------------------
 
 
-def mix_dense_tree(params, W, wire_dtype=None):
-    """Per-leaf Theta <- W Theta: one tensordot per pytree leaf."""
-    def leaf(x):
-        xw, back = _wire(x, wire_dtype)
-        y = jnp.tensordot(W.astype(xw.dtype), xw, axes=1)
-        return back(y)
-    return jax.tree.map(leaf, params)
+def _leaf_codec(wire_dtype, wire):
+    """Codec shared by every leaf of one tree-path call (legacy wire_dtype
+    wins, mirroring panel._codecs). Error-feedback codecs are refused:
+    this path carries no residual state, so accepting them would silently
+    degrade int8_ef to plain int8 — only the panel engine
+    (dsgd.make_panel_segment + state["wire_err"]) honors error feedback."""
+    if wire_dtype is not None:
+        if wire is not None:
+            raise ValueError("pass either wire_dtype= or wire=, not both")
+        return wire_mod.dtype_codec(wire_dtype)
+    codec = wire_mod.get_codec(wire if wire is not None else "f32")
+    if codec.error_feedback:
+        raise ValueError(
+            f"codec '{codec.name}' needs an error-feedback residual, which "
+            "the per-leaf tree path cannot carry; use the panel engine "
+            "(dsgd.make_panel_segment) or a residual-free codec ('int8')")
+    return codec
 
 
-def mix_pairwise_tree(params, partner, weight=0.5, wire_dtype=None):
-    """Per-leaf pairwise exchange: one gather per pytree leaf."""
-    def leaf(x):
-        xw, back = _wire(x, wire_dtype)
+def _encode_leaf(codec, x, key, i):
+    """Apply a codec to one (m, ...) leaf: flatten to the leaf's (m, size)
+    panel (int8 scales are per-agent-per-leaf here), fold the key by leaf
+    index, reshape back."""
+    m = x.shape[0]
+    k = jax.random.fold_in(key, i) if (key is not None
+                                       and codec.needs_key) else None
+    xw, back, _ = codec.encode(x.reshape(m, -1), key=k)
+    return xw.reshape((xw.shape[0],) + x.shape[1:]), back
+
+
+def _tree_map_wire(fn, params, codec, key):
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    outs = []
+    for i, x in enumerate(leaves):
+        xw, back = _encode_leaf(codec, x, key, i)
+        outs.append(back(fn(xw)))
+    return jax.tree_util.tree_unflatten(treedef, outs)
+
+
+def mix_dense_tree(params, W, wire_dtype=None, wire=None, key=None):
+    """Per-leaf Theta <- W Theta: one tensordot per pytree leaf. Idle
+    ROWS of W (rows equal to the identity row, e.g. unmatched agents in a
+    matching) communicate nothing — under a lossy codec they keep their
+    exact parameters (mirrors panel.mix_dense)."""
+    codec = _leaf_codec(wire_dtype, wire)
+    m = W.shape[0]
+    idle = (None if isinstance(codec, wire_mod.F32Codec)
+            else jnp.all(W == jnp.eye(m, dtype=W.dtype), axis=1))
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    outs = []
+    for i, x in enumerate(leaves):
+        xw, back = _encode_leaf(codec, x, key, i)
+        y = back(jnp.tensordot(W.astype(xw.dtype), xw, axes=1))
+        if idle is not None:
+            y = jnp.where(idle.reshape((m,) + (1,) * (x.ndim - 1)), x, y)
+        outs.append(y)
+    return jax.tree_util.tree_unflatten(treedef, outs)
+
+
+def mix_pairwise_tree(params, partner, weight=0.5, wire_dtype=None,
+                      wire=None, key=None):
+    """Per-leaf pairwise exchange: one gather per pytree leaf. Idle rows
+    (partner[k] == k) keep their exact parameters — no codec touches
+    them (mirrors panel.mix_pairwise)."""
+    codec = _leaf_codec(wire_dtype, wire)
+    m = jax.tree_util.tree_leaves(params)[0].shape[0]
+    idle = partner == jnp.arange(m)
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    outs = []
+    for i, x in enumerate(leaves):
+        xw, back = _encode_leaf(codec, x, key, i)
         peer = jnp.take(xw, partner, axis=0)
-        return back((1.0 - weight) * xw + weight * peer.astype(xw.dtype))
-    return jax.tree.map(leaf, params)
+        y = back((1.0 - weight) * xw + weight * peer.astype(xw.dtype))
+        outs.append(jnp.where(idle.reshape((m,) + (1,) * (x.ndim - 1)),
+                              x, y))
+    return jax.tree_util.tree_unflatten(treedef, outs)
 
 
-def global_merge_tree(params, wire_dtype=None):
+def global_merge_tree(params, wire_dtype=None, wire=None, key=None):
     """Per-leaf global merging: one mean-reduce per pytree leaf."""
-    def leaf(x):
-        xw, back = _wire(x, wire_dtype)
+    codec = _leaf_codec(wire_dtype, wire)
+
+    def leaf(xw):
         mean = jnp.mean(xw.astype(jnp.float32), axis=0, keepdims=True)
-        return back(jnp.broadcast_to(mean, xw.shape).astype(xw.dtype))
-    return jax.tree.map(leaf, params)
+        return jnp.broadcast_to(mean, xw.shape).astype(xw.dtype)
+
+    return _tree_map_wire(leaf, params, codec, key)
 
 
 def merged_model_tree(params):

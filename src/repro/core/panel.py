@@ -19,12 +19,20 @@ the panel instead of one op per pytree leaf:
 * :func:`consensus_distance` — Xi_t in one pass (Pallas ``panel_reduce``
                             kernel when ``use_pallas=True``).
 
-``wire_dtype`` casts a group's payload for the communication only (the
-beyond-paper bf16-wire compression lever). The per-leaf tree-map originals
-survive in core/gossip.py as ``*_tree`` — they remain the right lowering
-when leaves carry heterogeneous shardings (launch/dryrun.py pod meshes),
-and they are the parity oracle the panel path is validated/benchmarked
-against (tests/test_panel_sharded.py, benchmarks/panel_bench.py).
+**Wire codecs.** Every communication op compresses its payload through the
+pluggable codec subsystem (repro/wire): ``f32`` identity, ``bf16`` cast
+(the original lever), ``int8`` per-row scales + stochastic rounding, and
+``int8_ef`` adding error feedback. The per-dtype-group policy lives on the
+spec (:func:`with_wire` — e.g. embeddings stay bf16 while dense blocks go
+int8) and :attr:`PanelSpec.wire_bytes` reports the codec-aware payload;
+the legacy ``wire_dtype=`` argument on the mix ops survives as an explicit
+per-call cast override. Stochastic codecs take an explicit ``key=``;
+error feedback threads a residual panel via ``err=``. The per-leaf
+tree-map originals survive in core/gossip.py as ``*_tree`` — they remain
+the right lowering when leaves carry heterogeneous shardings
+(launch/dryrun.py pod meshes), and they are the parity oracle the panel
+path is validated/benchmarked against (tests/test_panel_sharded.py,
+benchmarks/panel_bench.py).
 
 **Multi-device panels.** :func:`shard_spec` attaches a mesh and one
 PartitionSpec per dtype group to the spec — rows over the ('pod','agent')
@@ -47,6 +55,7 @@ import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro import wire as wire_mod
 from repro.kernels.gossip_mix import gossip_mix_panel
 from repro.kernels.panel_reduce import panel_mean_consensus
 
@@ -74,16 +83,30 @@ class PanelSpec:
     rows: int = 0                        # m (agents); 0 on legacy specs
     mesh: Optional[jax.sharding.Mesh] = None
     pspecs: Tuple[Tuple[str, P], ...] = ()  # (dtype key, group PartitionSpec)
+    wire: Tuple[Tuple[str, str], ...] = ()  # (dtype key, codec name) policy
 
     @property
     def width(self) -> int:
         """Total scalars per agent across all dtype groups."""
         return sum(w for _, w in self.groups)
 
+    def wire_of(self, key: str) -> str:
+        """Codec name for one dtype group ('f32' when no policy is set)."""
+        for k, name in self.wire:
+            if k == key:
+                return name
+        return "f32"
+
     @property
     def wire_bytes(self) -> int:
-        """Per-agent payload bytes of one full-panel exchange."""
-        return sum(w * jnp.dtype(k).itemsize for k, w in self.groups)
+        """Per-agent payload bytes of one full-panel exchange, CODEC-aware:
+        an int8 group pays 1 byte/scalar + its per-row scale, a bf16 wire
+        2 bytes/scalar, and only the f32 identity codec pays the storage
+        itemsize (the old behavior, which over-reported compressed wires
+        by the storage/wire ratio)."""
+        return sum(
+            wire_mod.get_codec(self.wire_of(k)).payload_bytes(1, w, k)
+            for k, w in self.groups)
 
     @property
     def sharded(self) -> bool:
@@ -143,6 +166,30 @@ def shard_spec(spec: PanelSpec, mesh, row_axes=None, col_axes=None
         (k, panel_pspec(mesh, spec.rows, w, row_axes, col_axes))
         for k, w in spec.groups)
     return replace(spec, mesh=mesh, pspecs=pspecs)
+
+
+def with_wire(spec: PanelSpec, wire) -> PanelSpec:
+    """Attach a wire-codec policy to ``spec``.
+
+    ``wire`` is a codec name applied to EVERY dtype group ('f32', 'bf16',
+    'int8', 'int8_ef'), or a {dtype-group: codec-name} dict for per-group
+    policies (unlisted groups fall back to 'f32'); None clears the policy.
+    Names are validated here so a typo fails at spec-build time, not
+    mid-trace."""
+    if wire is None:
+        return replace(spec, wire=())
+    if isinstance(wire, str):
+        mapping = {k: wire for k, _ in spec.groups}
+    else:
+        unknown = set(wire) - {k for k, _ in spec.groups}
+        if unknown:
+            raise ValueError(
+                f"wire policy names unknown dtype groups {sorted(unknown)}"
+                f"; this spec's groups: {[k for k, _ in spec.groups]}")
+        mapping = {k: wire.get(k, "f32") for k, _ in spec.groups}
+    for name in mapping.values():
+        wire_mod.get_codec(name)
+    return replace(spec, wire=tuple(sorted(mapping.items())))
 
 
 def place(x, ns: Optional[NamedSharding]):
@@ -211,10 +258,34 @@ def from_panel(panel, spec: PanelSpec, cast: bool = True,
 # ------------------------------------------------------------ fused ops
 
 
-def _wire(x, wire_dtype):
-    if wire_dtype is None or x.dtype == wire_dtype:
-        return x, lambda y: y
-    return x.astype(wire_dtype), lambda y: y.astype(x.dtype)
+def _codecs(panel, spec: Optional[PanelSpec], wire_dtype):
+    """Effective codec per dtype group for one communication op: the
+    explicit legacy ``wire_dtype`` argument wins (and refuses to combine
+    with a spec policy — one compression authority per call); else the
+    spec's wire policy; else the f32 identity."""
+    if wire_dtype is not None:
+        if spec is not None and spec.wire:
+            raise ValueError("pass either wire_dtype= (legacy cast) or a "
+                             "spec wire policy (with_wire), not both")
+        c = wire_mod.dtype_codec(wire_dtype)
+        return {k: c for k in panel}
+    if spec is not None and spec.wire:
+        return {k: wire_mod.get_codec(spec.wire_of(k)) for k in panel}
+    f32 = wire_mod.CODECS["f32"]
+    return {k: f32 for k in panel}
+
+
+def _wire_keys(codecs, key):
+    """One key per dtype group that needs one, folded in sorted-group
+    order so sharded and replicated runs draw identical randomness."""
+    names = sorted(k for k, c in codecs.items() if c.needs_key)
+    if not names:
+        return {k: None for k in codecs}
+    if key is None:
+        raise ValueError(f"wire codecs for groups {names} use stochastic "
+                         "rounding and need an explicit key=")
+    folded = {k: jax.random.fold_in(key, i) for i, k in enumerate(names)}
+    return {k: folded.get(k) for k in codecs}
 
 
 def _pallas_ok(use_pallas: bool, spec: Optional[PanelSpec]) -> bool:
@@ -224,53 +295,168 @@ def _pallas_ok(use_pallas: bool, spec: Optional[PanelSpec]) -> bool:
     return use_pallas and not (spec is not None and spec.sharded)
 
 
+def _mix_dense_groups(panel, W, *, wire_dtype, use_pallas, block_d,
+                      interpret, spec, key, err, with_mean):
+    """Shared body of mix_dense / mix_dense_mean. Returns (mixed, means,
+    new_err); means/new_err are None unless requested.
+
+    ``with_mean`` augments W with a 1^T/m row so the column mean comes out
+    of the SAME matmul (the MXU pass the mix already pays): for any
+    doubly-stochastic W the mean of the transmitted panel IS the mean of
+    the mixed panel, so the consensus monitor no longer needs its own
+    mean reduce. On a sharded spec the (m+1)-row product cannot shard
+    over the agent axes, so the mean falls back to a separate fsdp-local
+    reduce there. The first m output rows are bit-identical to the
+    unaugmented matmul either way (row-independent dot products).
+
+    Idle ROWS of W (rows equal to the identity row — e.g. unmatched
+    agents inside a random matching) communicate nothing, so under a
+    lossy codec those agents' params and EF residuals are restored
+    exactly after the matmul: no codec may touch a row that never hits
+    the wire. (The folded mean is the mean of the TRANSMITTED panel, so
+    it deviates from the restored panel's mean by at most one
+    quantization step per idle row — monitor-precision only.)"""
+    m = W.shape[0]
+    W32 = W.astype(jnp.float32)
+    pallas = _pallas_ok(use_pallas, spec)
+    codecs = _codecs(panel, spec, wire_dtype)
+    keys = _wire_keys(codecs, key)
+    lossy = any(not isinstance(c, wire_mod.F32Codec)
+                for c in codecs.values())
+    idle_rows = (jnp.all(W == jnp.eye(m, dtype=W.dtype), axis=1)[:, None]
+                 if lossy else None)
+    fold = with_mean and not (spec is not None and spec.sharded)
+    Wop = (jnp.concatenate([W32, jnp.full((1, m), 1.0 / m, jnp.float32)])
+           if fold else W32)
+
+    mixed, means = {}, ({} if with_mean else None)
+    new_err = {} if err is not None else None
+    for k, x in panel.items():
+        e = err[k] if err is not None else None
+        xw, back, ne = codecs[k].encode(x, key=keys[k], err=e,
+                                        use_pallas=pallas,
+                                        interpret=interpret)
+        # the Pallas kernel stores its output in the payload dtype, which
+        # would round the folded mean row for non-f32 payloads — those
+        # groups skip the augmented row (no wasted kernel work) and take
+        # one plain f32 mean of the transmitted panel instead (the same
+        # quantity for doubly-stochastic W, at XLA-fold precision)
+        fold_k = fold and not (pallas and xw.dtype != jnp.float32)
+        Wk = Wop if fold_k else W32
+        if pallas:
+            y = gossip_mix_panel(Wk, xw, block_d=block_d,
+                                 interpret=interpret)
+            if fold_k:
+                y, mu = y[:m], y[m].astype(jnp.float32)
+        else:
+            y32 = Wk @ xw.astype(jnp.float32)
+            if fold_k:
+                y32, mu = y32[:m], y32[m]
+            y = y32.astype(xw.dtype)
+        if fold and not fold_k:
+            mu = jnp.mean(xw.astype(jnp.float32), axis=0)
+        yb = back(y)
+        if idle_rows is not None:
+            yb = jnp.where(idle_rows, x, yb)
+            if e is not None:
+                ne = jnp.where(idle_rows, e, ne)
+        mixed[k] = _constrain_group(yb, spec, k)
+        if with_mean:
+            if not fold:
+                mu = _constrain_group(
+                    jnp.mean(xw.astype(jnp.float32), axis=0), spec, k,
+                    merged_panel=True)
+            means[k] = mu
+        if err is not None:
+            new_err[k] = _constrain_group(ne, spec, k)
+    return mixed, means, new_err
+
+
 def mix_dense(panel, W, *, wire_dtype=None, use_pallas: bool = False,
               block_d: int = 512, interpret: bool = True,
-              spec: Optional[PanelSpec] = None):
+              spec: Optional[PanelSpec] = None, key=None, err=None):
     """Theta <- W Theta: one f32-accumulating matmul per dtype group.
 
     With a sharded ``spec`` the output is constrained to the group layout,
     so each fsdp shard runs its own (m,m)x(m, D_g/fsdp) matmul and the
-    cross-agent collective carries only that shard's columns."""
-    W32 = W.astype(jnp.float32)
-    pallas = _pallas_ok(use_pallas, spec)
+    cross-agent collective carries only that shard's columns. The payload
+    is compressed per the spec's wire policy (or the legacy ``wire_dtype``
+    cast); stochastic codecs need ``key=``. Passing ``err=`` (the
+    error-feedback residual panel, {group: (m, D_g) f32}) switches the
+    return to ``(mixed, new_err)``."""
+    mixed, _, new_err = _mix_dense_groups(
+        panel, W, wire_dtype=wire_dtype, use_pallas=use_pallas,
+        block_d=block_d, interpret=interpret, spec=spec, key=key, err=err,
+        with_mean=False)
+    return mixed if err is None else (mixed, new_err)
 
-    def one(k, x):
-        xw, back = _wire(x, wire_dtype)
-        if pallas:
-            y = gossip_mix_panel(W32, xw, block_d=block_d,
-                                 interpret=interpret)
-        else:
-            y = (W32 @ xw.astype(jnp.float32)).astype(xw.dtype)
-        return _constrain_group(back(y), spec, k)
 
-    return {k: one(k, x) for k, x in panel.items()}
+def mix_dense_mean(panel, W, *, wire_dtype=None, use_pallas: bool = False,
+                   block_d: int = 512, interpret: bool = True,
+                   spec: Optional[PanelSpec] = None, key=None, err=None):
+    """mix_dense with the consensus mean folded into the mixing matmul.
+
+    Returns ``(mixed, mean, new_err)`` — mean is {group: (D_g,) f32}, the
+    column mean of the mixed panel (exact for doubly-stochastic W), ready
+    for :func:`consensus_from_mean`; new_err is None when ``err`` is."""
+    return _mix_dense_groups(
+        panel, W, wire_dtype=wire_dtype, use_pallas=use_pallas,
+        block_d=block_d, interpret=interpret, spec=spec, key=key, err=err,
+        with_mean=True)
 
 
 def mix_pairwise(panel, partner, weight=0.5, *, wire_dtype=None,
-                 spec: Optional[PanelSpec] = None):
+                 spec: Optional[PanelSpec] = None, key=None, err=None):
     """theta_k <- (1-w) theta_k + w theta_{partner[k]}: one gather + lerp
-    per dtype group. partner[k] == k means agent k idles this round."""
-    def one(k, x):
-        xw, back = _wire(x, wire_dtype)
-        peer = jnp.take(xw, partner, axis=0)
-        return _constrain_group(back((1.0 - weight) * xw + weight * peer),
-                                spec, k)
+    per dtype group. partner[k] == k means agent k idles this round —
+    idle rows keep their EXACT parameters (and error-feedback residual):
+    nothing travels their wire, so no codec may touch them.
+    Wire codecs as in :func:`mix_dense` (err= switches the return to
+    ``(mixed, new_err)``)."""
+    codecs = _codecs(panel, spec, wire_dtype)
+    keys = _wire_keys(codecs, key)
+    m = next(iter(panel.values())).shape[0]
+    idle = (partner == jnp.arange(m))[:, None]
 
-    return {k: one(k, x) for k, x in panel.items()}
+    def one(k, x):
+        e = err[k] if err is not None else None
+        xw, back, ne = codecs[k].encode(x, key=keys[k], err=e)
+        peer = jnp.take(xw, partner, axis=0)
+        y = jnp.where(idle, x,
+                      back((1.0 - weight) * xw + weight * peer))
+        if e is not None:
+            ne = jnp.where(idle, e, ne)
+        return _constrain_group(y, spec, k), ne
+
+    out = {k: one(k, x) for k, x in panel.items()}
+    mixed = {k: v[0] for k, v in out.items()}
+    if err is None:
+        return mixed
+    return mixed, {k: _constrain_group(v[1], spec, k)
+                   for k, v in out.items()}
 
 
 def global_merge(panel, *, wire_dtype=None,
-                 spec: Optional[PanelSpec] = None):
+                 spec: Optional[PanelSpec] = None, key=None, err=None):
     """theta_k <- mean_l theta_l: one mean-reduce + broadcast per group.
-    Sharded: an all-reduce over the agent axes per fsdp column shard."""
+    Sharded: an all-reduce over the agent axes per fsdp column shard.
+    Wire codecs as in :func:`mix_dense`."""
+    codecs = _codecs(panel, spec, wire_dtype)
+    keys = _wire_keys(codecs, key)
+
     def one(k, x):
-        xw, back = _wire(x, wire_dtype)
+        e = err[k] if err is not None else None
+        xw, back, ne = codecs[k].encode(x, key=keys[k], err=e)
         mean = jnp.mean(xw.astype(jnp.float32), axis=0, keepdims=True)
         y = back(jnp.broadcast_to(mean, xw.shape).astype(xw.dtype))
-        return _constrain_group(y, spec, k)
+        return _constrain_group(y, spec, k), ne
 
-    return {k: one(k, x) for k, x in panel.items()}
+    out = {k: one(k, x) for k, x in panel.items()}
+    mixed = {k: v[0] for k, v in out.items()}
+    if err is None:
+        return mixed
+    return mixed, {k: _constrain_group(v[1], spec, k)
+                   for k, v in out.items()}
 
 
 def merged(panel, *, use_pallas: bool = False, block_d: int = 512,
@@ -308,6 +494,18 @@ def consensus_distance(panel, *, use_pallas: bool = False,
             mean = jnp.mean(x32, axis=0, keepdims=True)
             sq = jnp.sum(jnp.square(x32 - mean))
         total = total + sq
+    return jnp.sqrt(total / m)
+
+
+def consensus_from_mean(panel, means):
+    """Xi_t from a PRECOMPUTED column-mean panel ({group: (D_g,) f32},
+    e.g. the folded row of :func:`mix_dense_mean`): one deviation pass,
+    no second mean reduce over the panel."""
+    m = next(iter(panel.values())).shape[0]
+    total = jnp.zeros((), jnp.float32)
+    for k, x in panel.items():
+        x32 = x.astype(jnp.float32)
+        total = total + jnp.sum(jnp.square(x32 - means[k][None]))
     return jnp.sqrt(total / m)
 
 

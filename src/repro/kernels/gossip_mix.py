@@ -24,8 +24,13 @@ def _mix_kernel(w_ref, t_ref, o_ref):
 
 
 def gossip_mix_panel(W, theta, *, block_d: int = 512, interpret: bool = True):
-    """W: (m, m); theta: (m, D) -> W @ theta, D tiled into VMEM blocks."""
-    m, D = theta.shape
+    """W: (n, m); theta: (m, D) -> W @ theta, D tiled into VMEM blocks.
+
+    n == m for a plain mixing matrix; the consensus-folded path passes
+    n == m + 1 (W augmented with a 1^T/m row, see panel.mix_dense_mean)
+    and reads the column mean off the extra output row."""
+    n, m = W.shape
+    D = theta.shape[1]
     block_d = min(block_d, D)
     pad = (-D) % block_d
     if pad:
@@ -36,11 +41,11 @@ def gossip_mix_panel(W, theta, *, block_d: int = 512, interpret: bool = True):
         _mix_kernel,
         grid=(nd,),
         in_specs=[
-            pl.BlockSpec((m, m), lambda i: (0, 0)),
+            pl.BlockSpec((n, m), lambda i: (0, 0)),
             pl.BlockSpec((m, block_d), lambda i: (0, i)),
         ],
-        out_specs=pl.BlockSpec((m, block_d), lambda i: (0, i)),
-        out_shape=jax.ShapeDtypeStruct((m, Dp), theta.dtype),
+        out_specs=pl.BlockSpec((n, block_d), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((n, Dp), theta.dtype),
         interpret=interpret,
     )(W, theta)
     return out[:, :D]

@@ -40,3 +40,29 @@ def panel_mean_consensus_ref(theta):
     mean = jnp.mean(t, axis=0)
     sq = jnp.sum(jnp.square(t - mean[None]))
     return mean, sq
+
+
+def int8_scale_ref(x):
+    """Per-row symmetric int8 scale for an (m, D) panel: amax_k / 127 in
+    f32, with all-zero rows mapped to scale 1/127 so dequantization is
+    always a plain multiply."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=1, keepdims=True)
+    return jnp.where(amax > 0, amax, 1.0) / 127.0
+
+
+def quantize_int8_ref(x, scale, u=None):
+    """x: (m, D); scale: (m, 1) f32 -> int8 values in [-127, 127].
+
+    Oracle for kernels/wire_quant.py. ``u`` (same shape as x, uniform in
+    [0, 1)) selects stochastic rounding floor(x/scale + u) — unbiased in
+    expectation over u; ``u=None`` rounds to nearest (ties to even,
+    matching jnp.round). The clip guards the float boundary rows where
+    x/scale lands an ulp outside +/-127."""
+    s = x.astype(jnp.float32) / scale
+    q = jnp.floor(s + u) if u is not None else jnp.round(s)
+    return jnp.clip(q, -127.0, 127.0).astype(jnp.int8)
+
+
+def dequantize_int8_ref(q, scale):
+    """q: (m, D) int8; scale: (m, 1) f32 -> f32 panel q * scale."""
+    return q.astype(jnp.float32) * scale

@@ -1,0 +1,149 @@
+"""Pallas TPU kernels for the quantized-wire codec: int8 panel (de)quant.
+
+The wire codec's hot ops on an (m, D) parameter panel: quantize each
+agent's row to int8 against a per-row symmetric scale (optionally with
+stochastic rounding), and dequantize back to f32 on the receive side.
+TPU adaptation mirrors kernels/gossip_mix.py: D is tiled into VMEM blocks
+(``block_d`` columns), the tiny (m, 1) scale column is resident per grid
+step, math in f32 on the VPU.
+
+Randomness: stochastic rounding is floor(x/scale + u) with u uniform in
+[0, 1). The portable entry point takes ``u`` as an INPUT panel (threaded
+from a jax PRNG key by the codec layer — bit-identical to the
+``kernels/ref.py`` oracle, and runnable in interpret mode on CPU where
+``pltpu.prng_seed`` has no lowering). ``quantize_int8_panel_native`` is
+the TPU-only variant that draws the bits on-chip from a scalar seed
+(``pltpu.prng_random_bits``), saving the (m, D) uniform input's HBM
+traffic on real hardware.
+
+Scales are computed OUTSIDE the kernels (``kernels/ref.py:
+int8_scale_ref`` — one cheap XLA row-reduce): the row amax needs a full
+pass over D before any block can quantize, so fusing it in would force a
+second grid sweep for no bandwidth win.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.ref import int8_scale_ref
+
+
+def _round_kernel(x_ref, s_ref, o_ref):
+    s = x_ref[...].astype(jnp.float32) / s_ref[...]
+    o_ref[...] = jnp.clip(jnp.round(s), -127.0, 127.0).astype(jnp.int8)
+
+
+def _stoch_kernel(x_ref, s_ref, u_ref, o_ref):
+    s = x_ref[...].astype(jnp.float32) / s_ref[...]
+    o_ref[...] = jnp.clip(jnp.floor(s + u_ref[...]),
+                          -127.0, 127.0).astype(jnp.int8)
+
+
+def _dequant_kernel(q_ref, s_ref, o_ref):
+    o_ref[...] = q_ref[...].astype(jnp.float32) * s_ref[...]
+
+
+def _pad_cols(x, block_d):
+    m, D = x.shape
+    pad = (-D) % block_d
+    return (jnp.pad(x, ((0, 0), (0, pad))) if pad else x), D + pad
+
+
+def quantize_int8_panel(x, scale=None, u=None, *, block_d: int = 512,
+                        interpret: bool = True):
+    """x: (m, D) float panel -> (q int8 (m, D), scale (m, 1) f32).
+
+    ``scale`` defaults to the per-row amax/127 (int8_scale_ref). ``u``
+    (uniform [0, 1), same shape as x) switches round-to-nearest to
+    stochastic rounding; zero-padded tail columns quantize to 0."""
+    m, D = x.shape
+    if scale is None:
+        scale = int8_scale_ref(x)
+    block_d = min(block_d, D)
+    xp, Dp = _pad_cols(x, block_d)
+    nd = Dp // block_d
+    scale_spec = pl.BlockSpec((m, 1), lambda i: (0, 0))
+    data_spec = pl.BlockSpec((m, block_d), lambda i: (0, i))
+    if u is None:
+        kernel, ops = _round_kernel, (xp, scale)
+        in_specs = [data_spec, scale_spec]
+    else:
+        up, _ = _pad_cols(u, block_d)
+        kernel, ops = _stoch_kernel, (xp, scale, up)
+        in_specs = [data_spec, scale_spec, data_spec]
+    q = pl.pallas_call(
+        kernel,
+        grid=(nd,),
+        in_specs=in_specs,
+        out_specs=data_spec,
+        out_shape=jax.ShapeDtypeStruct((m, Dp), jnp.int8),
+        interpret=interpret,
+    )(*ops)
+    return q[:, :D], scale
+
+
+def quantize_int8_panel_native(x, seed, scale=None, *, block_d: int = 512):
+    """TPU-only stochastic quantize drawing bits on-chip from ``seed``
+    (int32 scalar): no (m, D) uniform input, so the only HBM traffic is
+    x in / q out. ``pltpu.prng_seed`` has no CPU/interpret lowering —
+    this path never runs in the test container; the portable
+    ``quantize_int8_panel(u=...)`` is the verified oracle-parity path."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    m, D = x.shape
+    if scale is None:
+        scale = int8_scale_ref(x)
+    block_d = min(block_d, D)
+    xp, Dp = _pad_cols(x, block_d)
+    nd = Dp // block_d
+
+    def kernel(seed_ref, x_ref, s_ref, o_ref):
+        # distinct stream per grid step: the block index is passed as a
+        # SEPARATE seed word so pltpu.prng_seed hashes (seed, block)
+        # together — seed + program_id would alias consecutive caller
+        # seeds onto shifted copies of the same streams (round t block i
+        # == round t+1 block i-1), correlating the rounding across
+        # rounds. Low 24 bits -> f32-exact uniform.
+        pltpu.prng_seed(seed_ref[0], pl.program_id(0))
+        bits = pltpu.prng_random_bits(x_ref.shape)
+        u = (bits & 0xFFFFFF).astype(jnp.float32) * (1.0 / (1 << 24))
+        s = x_ref[...].astype(jnp.float32) / s_ref[...]
+        o_ref[...] = jnp.clip(jnp.floor(s + u),
+                              -127.0, 127.0).astype(jnp.int8)
+
+    q = pl.pallas_call(
+        kernel,
+        grid=(nd,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((m, block_d), lambda i: (0, i)),
+            pl.BlockSpec((m, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((m, block_d), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((m, Dp), jnp.int8),
+        interpret=False,
+    )(jnp.asarray([seed], jnp.int32), xp, scale)
+    return q[:, :D], scale
+
+
+def dequantize_int8_panel(q, scale, *, block_d: int = 512,
+                          interpret: bool = True):
+    """q: (m, D) int8; scale: (m, 1) f32 -> f32 panel q * scale."""
+    m, D = q.shape
+    block_d = min(block_d, D)
+    qp, Dp = _pad_cols(q, block_d)
+    nd = Dp // block_d
+    out = pl.pallas_call(
+        _dequant_kernel,
+        grid=(nd,),
+        in_specs=[
+            pl.BlockSpec((m, block_d), lambda i: (0, i)),
+            pl.BlockSpec((m, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((m, block_d), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((m, Dp), jnp.float32),
+        interpret=interpret,
+    )(qp, scale)
+    return out[:, :D]

@@ -20,6 +20,11 @@ Variants (the §Perf levers; "baseline" is the paper-faithful config):
   panel         flat-panel segment engine, panels D-sharded over 'fsdp'
                 (fused mix -> per-shard matmuls, fsdp-local collectives)
   panel_bf16wire  panel engine with a bf16 gossip payload
+  panel_int8wire  panel engine with the int8 stochastic-rounding wire
+                codec (repro.wire; modelled payload /4 on f32 groups via
+                PanelSpec.wire_bytes — the SPMD collectives still move
+                dequantized f32 shards today, see ROADMAP "True int8
+                collectives")
 """
 
 import argparse  # noqa: E402
@@ -163,12 +168,17 @@ def build_train_panel(cfg, shape, multi_pod, variant, scan=True):
     opt = make_optimizer("adamw", 1e-4)
     key = jax.random.PRNGKey(0)
 
+    wire = ("bf16" if "bf16wire" in variant
+            else "int8" if "int8wire" in variant else None)
     params_sds = jax.eval_shape(
         lambda k: dsgd._init_agent_params(model.init_params, m, k, False),
         key)
     spec = panel_mod.shard_spec(panel_mod.make_spec(params_sds), mesh)
+    if wire is not None:
+        spec = panel_mod.with_wire(spec, wire)
     state_sds = jax.eval_shape(
-        lambda k: dsgd.init_panel_state(model.init_params, opt, m, k)[0],
+        lambda k: dsgd.init_panel_state(model.init_params, opt, m, k,
+                                        wire=wire)[0],
         key)
     param_ps = resolve(model.param_spec(), params_sds, mesh, TRAIN_RULES,
                        prefix=(("pod", "agent"),))
@@ -184,18 +194,19 @@ def build_train_panel(cfg, shape, multi_pod, variant, scan=True):
     seg_batch_ps = jax.tree.map(lambda ps: P(None, None, *ps), batch_ps,
                                 is_leaf=_leaf_is_pspec)
 
-    wire = jnp.bfloat16 if "bf16wire" in variant else None
     in_sh = (dsgd.panel_state_shardings(state_sds, spec),
              _named(mesh, seg_batch_ps),
              NamedSharding(mesh, P()), NamedSharding(mesh, P()))
     fn = dsgd.make_panel_segment(model.loss_fn, opt, 1, spec,
-                                 wire_dtype=wire, param_shardings=param_sh,
+                                 param_shardings=param_sh,
                                  in_shardings=in_sh)
     w_sds = jax.ShapeDtypeStruct((1, m, m), jnp.float32)
     key_sds = jax.eval_shape(lambda: jax.random.PRNGKey(0))
     args = (state_sds, seg_batch, w_sds, key_sds)
     return fn, args, mesh, TRAIN_RULES, {"agents": m,
-                                         "panel_width": spec.width}
+                                         "panel_width": spec.width,
+                                         "wire_bytes_per_agent":
+                                             spec.wire_bytes}
 
 
 def build_serve(cfg, shape, multi_pod, variant):

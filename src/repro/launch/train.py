@@ -110,8 +110,12 @@ def main():
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--alpha", type=float, default=0.1,
                     help="Dirichlet heterogeneity")
-    ap.add_argument("--wire", default="f32", choices=["f32", "bf16"],
-                    help="gossip payload dtype (bf16 halves wire bytes)")
+    ap.add_argument("--wire", default="f32",
+                    choices=["f32", "bf16", "int8", "int8_ef"],
+                    help="gossip wire codec (repro.wire): bf16 halves wire "
+                         "bytes, int8 cuts them ~4x (per-agent scales + "
+                         "stochastic rounding), int8_ef adds error "
+                         "feedback (an extra donated residual panel)")
     ap.add_argument("--mesh", default="auto",
                     choices=["auto", "none", "train", "debug"],
                     help="shard the (m, D) panel on a training mesh: rows "
@@ -143,11 +147,11 @@ def main():
 
     key = jax.random.PRNGKey(args.seed)
     state, spec = dsgd.init_panel_state(model.init_params, opt, m, key,
-                                        mesh=mesh)
-    wire = jnp.bfloat16 if args.wire == "bf16" else None
+                                        mesh=mesh, wire=args.wire)
+    print(f"wire codec {args.wire}: {spec.wire_bytes} B/agent per "
+          f"full-panel exchange")
     segment_fn = dsgd.make_panel_segment(model.loss_fn, opt,
-                                         args.local_steps, spec,
-                                         wire_dtype=wire)
+                                         args.local_steps, spec)
 
     lm = SyntheticLM(vocab=cfg.vocab_size, num_domains=8, seed=args.seed)
     mixtures = lm.domain_mixtures(m, args.alpha, seed=args.seed + 1)

@@ -1,0 +1,9 @@
+"""Quantized-wire codec subsystem (see wire/codec.py for the contract).
+
+The panel engine (core/panel.py) resolves a per-dtype-group policy — a
+``(group, codec-name)`` table carried on ``PanelSpec.wire`` via
+``panel.with_wire`` — through :func:`get_codec`; everything here is
+engine-agnostic (the per-leaf ``gossip.*_tree`` oracle path uses the
+same codecs per leaf)."""
+from repro.wire.codec import (CODECS, DtypeCodec, F32Codec,  # noqa: F401
+                              Int8Codec, dtype_codec, get_codec)

@@ -1,0 +1,178 @@
+"""Wire codecs: pluggable compression of the gossip communication payload.
+
+A codec controls how one dtype group's (m, D_g) panel travels during a
+communication op without changing the storage dtype of the state. The
+single entry point mirrors (and generalizes) the old ``panel._wire`` cast:
+
+    xw, back, new_err = codec.encode(x, key=..., err=...,
+                                     use_pallas=..., interpret=...)
+
+``xw`` is the array the mixing math runs on — the receive-side view of
+the payload (for ``int8`` that is the dequantized panel; quantization
+error is already baked in, exactly what every peer reconstructs).
+``back`` restores the storage dtype after mixing. ``new_err`` is the
+updated error-feedback residual (input ``err`` passed through untouched
+on residual-free codecs; an ``error_feedback`` codec REQUIRES ``err`` —
+a missing residual raises rather than silently dropping the correction).
+
+Codecs:
+
+* ``f32``  — identity. The payload is the storage dtype as-is; bit-exact
+  fallback (a bf16-stored group still ships 2-byte scalars — "f32" names
+  full *storage* precision on the wire, not an upcast).
+* ``bf16`` — the original wire-dtype lever, ported: cast to bf16 for the
+  exchange, mix in bf16 with f32 accumulation, cast back. Bit-identical
+  to the legacy ``wire_dtype=jnp.bfloat16`` behavior.
+* ``int8`` — per-row (per-agent) symmetric scales amax/127, stochastic
+  rounding driven by an explicit PRNG key (no ambient randomness: the
+  key is threaded through the segment scan), 4x fewer payload bytes on
+  f32 groups. ``int8_ef`` adds error feedback: the residual
+  (x + e) - dequant(quant(x + e)) is returned for the caller to carry —
+  the panel engine keeps it as an extra donated (m, D) f32 panel.
+
+Kernels: ``use_pallas=True`` routes quantize/dequantize through the
+Pallas kernels in ``kernels/wire_quant.py`` (same math as the
+``kernels/ref.py`` oracles, bit-identical given the same uniforms);
+sharded specs keep ``use_pallas=False`` so SPMD partitions the plain-XLA
+ops, mirroring the panel matmul kernels.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as ref_mod
+from repro.kernels import wire_quant
+
+
+def _identity(y):
+    return y
+
+
+class F32Codec:
+    """Identity codec: the payload is the storage dtype, untouched."""
+    name = "f32"
+    needs_key = False
+    error_feedback = False
+
+    def payload_bytes(self, rows: int, width: int, dtype) -> int:
+        return rows * width * jnp.dtype(dtype).itemsize
+
+    def encode(self, x, key=None, err=None, use_pallas: bool = False,
+               interpret: bool = True):
+        return x, _identity, err
+
+
+class DtypeCodec:
+    """Cast-only codec (the legacy ``wire_dtype`` lever): payload travels
+    as ``wire_dtype``, the mix runs in that dtype with f32 accumulation,
+    and the result is cast back to storage."""
+    needs_key = False
+    error_feedback = False
+
+    def __init__(self, wire_dtype, name: str):
+        self.wire_dtype = jnp.dtype(wire_dtype)
+        self.name = name
+
+    def payload_bytes(self, rows: int, width: int, dtype) -> int:
+        return rows * width * self.wire_dtype.itemsize
+
+    def encode(self, x, key=None, err=None, use_pallas: bool = False,
+               interpret: bool = True):
+        if x.dtype == self.wire_dtype:
+            return x, _identity, err
+        return (x.astype(self.wire_dtype),
+                lambda y: y.astype(x.dtype), err)
+
+
+class Int8Codec:
+    """int8 payload with per-row scales; optionally stochastic rounding
+    (key-driven) and error feedback (residual returned to the caller)."""
+    SCALE_BYTES = 4  # one f32 scale per agent row
+
+    def __init__(self, name: str, stochastic: bool = True,
+                 error_feedback: bool = False):
+        self.name = name
+        self.stochastic = stochastic
+        self.error_feedback = error_feedback
+
+    @property
+    def needs_key(self) -> bool:
+        return self.stochastic
+
+    def payload_bytes(self, rows: int, width: int, dtype) -> int:
+        return rows * (width + self.SCALE_BYTES)
+
+    def encode(self, x, key=None, err=None, use_pallas: bool = False,
+               interpret: bool = True):
+        if self.error_feedback and err is None:
+            raise ValueError(
+                f"codec '{self.name}' uses error feedback and needs the "
+                "residual panel (err=...); a silent fallback to plain "
+                "int8 would drop the accumulated correction")
+        x32 = x.astype(jnp.float32)
+        if self.error_feedback:
+            # only the EF codec consumes the residual; a residual-free
+            # int8 codec handed an err (e.g. state resumed from an
+            # int8_ef run) must NOT fold it into the payload — it would
+            # re-inject the same bias every round without ever updating it
+            x32 = x32 + err
+        u = None
+        if self.stochastic:
+            if key is None:
+                raise ValueError(
+                    f"codec '{self.name}' uses stochastic rounding and "
+                    "needs an explicit PRNG key (key=...)")
+            # partitionable threefry ONLY for the wire draw: the default
+            # (non-partitionable) lowering produces different bits when
+            # the draw is jitted under SPMD than eager/replicated, which
+            # would break sharded-vs-replicated parity of the stochastic
+            # rounding. Scoped here so the rest of the program's key
+            # schedule (init, data, local steps) is untouched.
+            with jax.threefry_partitionable(True):
+                u = jax.random.uniform(key, x32.shape, jnp.float32)
+        scale = ref_mod.int8_scale_ref(x32)
+        if use_pallas:
+            q, _ = wire_quant.quantize_int8_panel(x32, scale, u,
+                                                  interpret=interpret)
+            xhat32 = wire_quant.dequantize_int8_panel(q, scale,
+                                                      interpret=interpret)
+        else:
+            q = ref_mod.quantize_int8_ref(x32, scale, u)
+            xhat32 = ref_mod.dequantize_int8_ref(q, scale)
+        new_err = (x32 - xhat32) if (self.error_feedback
+                                     and err is not None) else err
+        if x.dtype == jnp.float32:
+            return xhat32, _identity, new_err
+        return xhat32.astype(x.dtype), _identity, new_err
+
+
+CODECS = {
+    "f32": F32Codec(),
+    "bf16": DtypeCodec(jnp.bfloat16, "bf16"),
+    "int8": Int8Codec("int8", stochastic=True, error_feedback=False),
+    "int8_ef": Int8Codec("int8_ef", stochastic=True, error_feedback=True),
+}
+
+
+def get_codec(name):
+    """Resolve a codec by registry name; codec instances pass through
+    (lets tests build e.g. a deterministic-rounding Int8Codec)."""
+    if not isinstance(name, str) and hasattr(name, "encode"):
+        return name
+    try:
+        return CODECS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown wire codec {name!r}; known: {sorted(CODECS)}"
+        ) from None
+
+
+def dtype_codec(wire_dtype):
+    """Codec for the legacy ``wire_dtype=`` argument (None -> identity)."""
+    if wire_dtype is None:
+        return CODECS["f32"]
+    wd = jnp.dtype(wire_dtype)
+    if wd == jnp.dtype(jnp.bfloat16):
+        return CODECS["bf16"]
+    return DtypeCodec(wd, wd.name)

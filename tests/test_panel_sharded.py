@@ -13,6 +13,11 @@ subprocess — tests/_multidevice.py). Asserts:
 * the lowered fused mix carries fsdp-LOCAL collective traffic: nonzero,
   but strictly less than a full-panel (replicated-D) exchange because
   each fsdp shard only moves its own column slice;
+* the int8 wire codec (repro/wire) partitions cleanly: the sharded fused
+  mix draws bit-identical stochastic rounding to the replicated engine
+  given the same key (wire keys fold in sorted-group order, independent
+  of the mesh), stays within one quantization step of the f32 mix, and
+  the codec-aware ``PanelSpec.wire_bytes`` orders int8 < bf16 < f32;
 * the full ``make_panel_segment`` step compiles on the training-mesh
   axes with nonzero collective bytes and reproduces the tree-state round
   driver.
@@ -77,6 +82,33 @@ PARITY_SCRIPT = textwrap.dedent("""
     mm = jax.jit(lambda p: panel_mod.merged(p, spec=spec))(pan)
     rec["merged_err"] = max_err(panel_mod.from_panel(mm, spec, cast=False),
                                 gossip.merged_model_tree(tree))
+
+    # int8 wire codec on the debug mesh: the sharded fused mix must draw
+    # the SAME stochastic rounding as the replicated engine (wire keys are
+    # folded in sorted-group order, independent of partitioning) and land
+    # within one quantization step of the f32 mix
+    spec_i8 = panel_mod.with_wire(spec, "int8")
+    repl_i8 = panel_mod.with_wire(panel_mod.make_spec(tree), "int8")
+    wkey = jax.random.PRNGKey(5)
+    mix_i8 = jax.jit(lambda p, W: panel_mod.mix_dense(p, W, spec=spec_i8,
+                                                      key=wkey))
+    out_i8 = mix_i8(pan, W)
+    rec["mix_int8_shard_vs_repl_err"] = max_err(
+        panel_mod.from_panel(out_i8, spec_i8),
+        panel_mod.from_panel(
+            panel_mod.mix_dense(panel_mod.to_panel(tree, repl_i8), W,
+                                spec=repl_i8, key=wkey), repl_i8))
+    rec["mix_int8_vs_f32_err"] = max_err(
+        panel_mod.from_panel(out_i8, spec_i8),
+        panel_mod.from_panel(mix(pan, W), spec))
+    # one int8 quantization step per dtype group: max per-row scale
+    rec["int8_step"] = max(
+        float(jnp.max(jnp.abs(x.astype(jnp.float32)))) / 127.0
+        for x in pan.values())
+    rec["wire_bytes"] = {
+        "f32": spec.wire_bytes,
+        "bf16": panel_mod.with_wire(spec, "bf16").wire_bytes,
+        "int8": spec_i8.wire_bytes}
 
     # collective traffic of the lowered fused mix: fsdp-local
     per_kind, total, counts = collective_bytes(
@@ -194,6 +226,21 @@ class TestShardedPanelParity:
     def test_consensus_distance(self, parity):
         assert parity["consensus"] == pytest.approx(
             parity["consensus_ref"], rel=1e-6)
+
+    def test_mix_int8_sharded_matches_replicated_bitwise(self, parity):
+        # same key => same stochastic rounding, whatever the partitioning
+        assert parity["mix_int8_shard_vs_repl_err"] == 0.0
+
+    def test_mix_int8_within_one_quantization_step_of_f32(self, parity):
+        # mixing is a convex combination of quantized rows, so the
+        # deviation from the f32 mix is bounded by ~one per-row scale
+        # (+ bf16 storage rounding on the bf16 group)
+        assert 0.0 < parity["mix_int8_vs_f32_err"] <= \
+            2.0 * parity["int8_step"]
+
+    def test_wire_bytes_codec_ordering(self, parity):
+        wb = parity["wire_bytes"]
+        assert wb["int8"] < wb["bf16"] < wb["f32"]
 
     def test_collectives_are_fsdp_local(self, parity):
         # nonzero traffic on the agent axis, but strictly less than a

@@ -1,0 +1,439 @@
+"""Wire-codec subsystem properties (repro/wire + kernels/wire_quant).
+
+Hypothesis-driven properties (falling back to the offline
+``_hypothesis_stub`` shim, which reports them as SKIPPED) plus plain
+contract tests that always run:
+
+* **stochastic rounding is unbiased** in expectation over PRNG keys:
+  averaging dequant(quant(x, key_i)) over many independent keys converges
+  to x at the statistical 1/sqrt(N) rate (per-element error bounded by a
+  6-sigma band in units of the per-row scale);
+* **int8 round-trip error contracts**: one encode is within one scale of
+  the input (half a scale for round-to-nearest), and under error feedback
+  the residual telescopes — the T-round mean of the transmitted panels
+  deviates from a CONSTANT input by at most O(scale/T), so the feedback
+  loop cancels quantization bias across rounds;
+* **W = I idle rounds are bit-exact under every codec**: a full
+  ``make_panel_segment`` run whose schedule never communicates produces
+  bit-identical state for f32/bf16/int8/int8_ef and the no-policy engine
+  (idle rounds skip the codec entirely; the wire key derivation must not
+  disturb the local-step rng schedule), and the error-feedback residual
+  panel stays exactly zero;
+* codec-aware ``PanelSpec.wire_bytes`` (the >=3.5x int8 claim), per-group
+  policies, key-handling errors, and bit-parity of the Pallas
+  quantize/dequantize kernels against the ``kernels/ref.py`` oracles.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # offline container: dev extra not installed
+    from _hypothesis_stub import given, settings, strategies as st
+
+from repro import wire as wire_mod
+from repro.core import dsgd
+from repro.core import panel as panel_mod
+from repro.kernels import ref as ref_mod
+from repro.kernels import wire_quant
+from repro.optim import make_optimizer
+from test_panel import _segment_inputs, _toy_problem
+
+pytestmark = pytest.mark.wire
+
+ALL_CODECS = ("f32", "bf16", "int8", "int8_ef")
+
+
+def _panel(m, d, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(m, d)) * scale, jnp.float32)
+
+
+# ------------------------------------------------- stochastic rounding
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 6), st.integers(1, 48), st.integers(0, 2**31 - 1))
+def test_stochastic_rounding_unbiased_over_keys(m, d, seed):
+    """E_key[decode(encode(x, key))] == x: the mean over N independent
+    keys lands within 6 standard errors (scale/(2 sqrt(N)) per element)."""
+    x = _panel(m, d, seed)
+    codec = wire_mod.get_codec("int8")
+    scale = ref_mod.int8_scale_ref(x)
+    N = 256
+    keys = jax.random.split(jax.random.PRNGKey(seed ^ 0x5EED), N)
+    xhats = jax.vmap(lambda k: codec.encode(x, key=k)[0])(keys)
+    err = jnp.abs(jnp.mean(xhats, axis=0) - x)
+    bound = 6.0 * scale / (2.0 * np.sqrt(N))
+    assert bool(jnp.all(err <= bound)), float(jnp.max(err / scale))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 8), st.integers(1, 128), st.integers(0, 2**31 - 1))
+def test_int8_roundtrip_error_bounded(m, d, seed):
+    """|decode(encode(x)) - x| <= scale stochastically, <= scale/2 for
+    round-to-nearest; all-zero rows survive exactly (scale guard)."""
+    x = _panel(m, d, seed).at[0].set(0.0)
+    scale = ref_mod.int8_scale_ref(x)
+    xh_sr, _, _ = wire_mod.get_codec("int8").encode(
+        x, key=jax.random.PRNGKey(seed))
+    det = wire_mod.Int8Codec("int8_det", stochastic=False)
+    xh_rn, _, _ = det.encode(x)
+    eps = 1e-6
+    assert bool(jnp.all(jnp.abs(xh_sr - x) <= scale * (1 + eps)))
+    assert bool(jnp.all(jnp.abs(xh_rn - x) <= scale * (0.5 + eps)))
+    assert bool(jnp.all(xh_sr[0] == 0.0)) and bool(jnp.all(xh_rn[0] == 0.0))
+
+
+def test_stochastic_encode_is_key_deterministic():
+    x = _panel(4, 32, 0)
+    codec = wire_mod.get_codec("int8")
+    a, _, _ = codec.encode(x, key=jax.random.PRNGKey(3))
+    b, _, _ = codec.encode(x, key=jax.random.PRNGKey(3))
+    c, _, _ = codec.encode(x, key=jax.random.PRNGKey(4))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert bool(jnp.any(a != c))
+
+
+def test_stochastic_codec_requires_key():
+    x = _panel(2, 8, 1)
+    with pytest.raises(ValueError, match="key"):
+        wire_mod.get_codec("int8").encode(x)
+    with pytest.raises(ValueError, match="stochastic"):
+        panel_mod.mix_dense(
+            {"float32": x}, jnp.eye(2),
+            spec=panel_mod.with_wire(panel_mod.make_spec(
+                {"w": x}), "int8"))
+
+
+# ----------------------------------------------------- error feedback
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 6), st.integers(1, 48), st.integers(0, 2**31 - 1))
+def test_error_feedback_residual_telescopes(m, d, seed):
+    """EF identity per round: xhat_t + e_t == x + e_{t-1} (up to f32
+    rounding), residual bounded by one scale; telescoping over T rounds of
+    a CONSTANT input, |mean_t(xhat_t) - x| <= (|e_0| + |e_T|)/T — the
+    feedback loop cancels quantization bias across rounds."""
+    x = _panel(m, d, seed)
+    codec = wire_mod.get_codec("int8_ef")
+    err = jnp.zeros_like(x)
+    T = 64
+    keys = jax.random.split(jax.random.PRNGKey(seed), T)
+    acc = jnp.zeros_like(x)
+    for t in range(T):
+        prev = err
+        xhat, _, err = codec.encode(x, key=keys[t], err=prev)
+        scale = ref_mod.int8_scale_ref(x + prev)
+        assert bool(jnp.all(jnp.abs(err) <= scale * (1 + 1e-6)))
+        np.testing.assert_allclose(np.asarray(xhat + err),
+                                   np.asarray(x + prev), atol=1e-5)
+        acc = acc + xhat
+    scale0 = ref_mod.int8_scale_ref(x)
+    assert bool(jnp.all(jnp.abs(acc / T - x) <= 2.5 * scale0 / T + 1e-6))
+
+
+def test_error_feedback_refused_on_tree_path():
+    """int8_ef must FAIL LOUDLY on the residual-less per-leaf path and the
+    stateless gossip wrappers instead of silently degrading to int8."""
+    from repro.core import gossip
+    tree = {"w": _panel(4, 8, 0)}
+    key = jax.random.PRNGKey(0)
+    with pytest.raises(ValueError, match="error-feedback"):
+        gossip.mix_dense_tree(tree, jnp.eye(4), wire="int8_ef", key=key)
+    with pytest.raises(ValueError, match="error-feedback"):
+        gossip.global_merge(tree, wire="int8_ef", key=key)
+    init_params, loss_fn = _toy_problem(4)
+    with pytest.raises(ValueError, match="error-feedback"):
+        dsgd.make_dsgd_round(loss_fn, make_optimizer("sgd", 1e-2), 2,
+                             wire="int8_ef")
+
+
+def test_unmatched_rows_stay_exact_in_dense_mix_under_int8():
+    """A random matching leaves unmatched agents with identity rows in W;
+    those agents communicate nothing, so the dense mix must restore their
+    params (and EF residual) exactly — only matched rows carry
+    quantization. Panel and tree paths agree on which rows are exact."""
+    from repro.core import gossip
+    m = 4
+    x = _panel(m, 24, 8)
+    pan = {"float32": x}
+    # agents 0, 1 matched; 2, 3 unmatched (identity rows)
+    W = jnp.asarray([[0.5, 0.5, 0, 0], [0.5, 0.5, 0, 0],
+                     [0, 0, 1.0, 0], [0, 0, 0, 1.0]], jnp.float32)
+    key = jax.random.PRNGKey(4)
+    spec = panel_mod.with_wire(panel_mod.make_spec({"w": x}), "int8")
+    out = panel_mod.mix_dense(pan, W, spec=spec, key=key)["float32"]
+    np.testing.assert_array_equal(np.asarray(out[2:]), np.asarray(x[2:]))
+    assert bool(jnp.any(out[:2] != x[:2]))
+    # EF residual of unmatched rows passes through untouched
+    spec_ef = panel_mod.with_wire(panel_mod.make_spec({"w": x}), "int8_ef")
+    e0 = {"float32": jnp.full_like(x, 0.01)}
+    _, e1 = panel_mod.mix_dense(pan, W, spec=spec_ef, key=key, err=e0)
+    np.testing.assert_array_equal(np.asarray(e1["float32"][2:]),
+                                  np.asarray(e0["float32"][2:]))
+    # tree path: same exact-row semantics (leaf-wise scales elsewhere)
+    t = gossip.mix_dense_tree({"w": x}, W, wire="int8", key=key)
+    np.testing.assert_array_equal(np.asarray(t["w"][2:]),
+                                  np.asarray(x[2:]))
+
+
+def test_idle_pairwise_rows_stay_exact_under_int8():
+    """partner[k] == k idles agent k — nothing travels its wire, so no
+    codec may touch its row: params (and the EF residual) stay bit-exact
+    while matched rows mix quantized payloads. Panel and tree paths
+    agree."""
+    from repro.core import gossip
+    m = 4
+    x = _panel(m, 24, 6)
+    pan = {"float32": x}
+    spec = panel_mod.with_wire(
+        panel_mod.make_spec({"w": x}), "int8")
+    partner = jnp.asarray([0, 1, 3, 2], jnp.int32)  # 0, 1 idle; 2<->3
+    key = jax.random.PRNGKey(2)
+    mixed = panel_mod.mix_pairwise(pan, partner, spec=spec, key=key)
+    out = mixed["float32"]
+    np.testing.assert_array_equal(np.asarray(out[:2]), np.asarray(x[:2]))
+    assert bool(jnp.any(out[2:] != x[2:]))
+    # EF residual of idle rows passes through untouched
+    e0 = {"float32": jnp.full_like(x, 0.01)}
+    spec_ef = panel_mod.with_wire(panel_mod.make_spec({"w": x}), "int8_ef")
+    _, e1 = panel_mod.mix_pairwise(pan, partner, spec=spec_ef, key=key,
+                                   err=e0)
+    np.testing.assert_array_equal(np.asarray(e1["float32"][:2]),
+                                  np.asarray(e0["float32"][:2]))
+    assert bool(jnp.any(e1["float32"][2:] != e0["float32"][2:]))
+    # tree path mirrors the panel semantics (leaf-wise scales for matched
+    # rows, bit-exact idle rows)
+    t = gossip.mix_pairwise_tree({"w": x}, partner, wire="int8", key=key)
+    np.testing.assert_array_equal(np.asarray(t["w"][:2]),
+                                  np.asarray(x[:2]))
+
+
+def test_plain_int8_does_not_update_residual():
+    """The non-EF int8 codec must pass a supplied residual through
+    untouched (error_feedback=False means no accumulation semantics)."""
+    x = _panel(3, 16, 2)
+    e0 = jnp.ones_like(x) * 0.01
+    k = jax.random.PRNGKey(0)
+    xhat, _, e1 = wire_mod.get_codec("int8").encode(x, key=k, err=e0)
+    np.testing.assert_array_equal(np.asarray(e0), np.asarray(e1))
+    # ... and must not fold it into the payload either (re-injecting the
+    # same bias every round)
+    xhat_no_err, _, _ = wire_mod.get_codec("int8").encode(x, key=k)
+    np.testing.assert_array_equal(np.asarray(xhat),
+                                  np.asarray(xhat_no_err))
+
+
+def test_ef_codec_requires_residual():
+    """An error-feedback codec with no residual must raise, not silently
+    degrade to plain int8 (dropping the accumulated correction)."""
+    x = _panel(2, 8, 3)
+    with pytest.raises(ValueError, match="err"):
+        wire_mod.get_codec("int8_ef").encode(x, key=jax.random.PRNGKey(0))
+    spec = panel_mod.with_wire(panel_mod.make_spec({"w": x}), "int8_ef")
+    with pytest.raises(ValueError, match="err"):
+        panel_mod.global_merge({"float32": x}, spec=spec,
+                               key=jax.random.PRNGKey(0))
+
+
+def test_tree_driver_idle_rounds_bitexact_under_int8():
+    """The tree-state round driver must skip the codec on W == I rounds
+    (mirrors the panel engine's idle guard): an int8 run over idle-only
+    rounds is bit-identical to the uncompressed run."""
+    from repro.core import topology  # noqa: F401  (parity with panel test)
+    m, H, dim, classes = 4, 2, 10, 3
+    init_params, loss_fn = _toy_problem(m, dim, classes)
+    opt = make_optimizer("adamw", 1e-2)
+    _, (bx, by) = _segment_inputs(2, H, m, dim, classes)
+    W = jnp.eye(m, dtype=jnp.float32)
+
+    def run(wire):
+        state = dsgd.init_state(init_params, opt, m, jax.random.PRNGKey(0))
+        round_fn = jax.jit(dsgd.make_dsgd_round(loss_fn, opt, H,
+                                                wire=wire))
+        for t in range(2):
+            state, _ = round_fn(state, (bx[t], by[t]), W,
+                                jax.random.PRNGKey(t))
+        return state
+
+    a, b = run(None), run("int8")
+    for x, y in zip(jax.tree.leaves(a["params"]),
+                    jax.tree.leaves(b["params"])):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# --------------------------------------------- idle rounds, segment
+
+
+@pytest.mark.parametrize("codec", ALL_CODECS)
+def test_idle_segment_bitexact_under_every_codec(codec):
+    """A schedule of W = I rounds communicates nothing, so EVERY codec
+    must leave the engine bit-identical to the no-policy run: the idle
+    branch skips the codec, and the wire-key fold_in must not perturb the
+    local-step rng schedule. The EF residual stays exactly zero."""
+    m, H, S, dim, classes = 4, 2, 3, 10, 3
+    init_params, loss_fn = _toy_problem(m, dim, classes)
+    opt = make_optimizer("adamw", 1e-2)
+    _, (bx, by) = _segment_inputs(S, H, m, dim, classes)
+    Ws = jnp.broadcast_to(jnp.eye(m, dtype=jnp.float32), (S, m, m))
+
+    def run(wire):
+        pstate, spec = dsgd.init_panel_state(
+            init_params, opt, m, jax.random.PRNGKey(0), wire=wire)
+        seg_fn = dsgd.make_panel_segment(loss_fn, opt, H, spec)
+        return seg_fn(pstate, (bx, by), Ws, jax.random.PRNGKey(1))
+
+    base, base_mets = run(None)
+    ps, mets = run(codec)
+    for a, b in zip(jax.tree.leaves(base["panel"]),
+                    jax.tree.leaves(ps["panel"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(base_mets["loss"]),
+                                  np.asarray(mets["loss"]))
+    np.testing.assert_array_equal(np.asarray(base_mets["consensus"]),
+                                  np.asarray(mets["consensus"]))
+    if codec == "int8_ef":
+        assert all(bool(jnp.all(v == 0.0))
+                   for v in ps["wire_err"].values())
+
+
+def test_int8_ef_segment_runs_and_merges():
+    """Communicating segment under int8_ef: the residual panel becomes
+    nonzero after a gossip round, and the final fully-connected round
+    still collapses consensus (merge through the codec)."""
+    m, H, dim, classes = 4, 2, 10, 3
+    from repro.core import topology
+    init_params, loss_fn = _toy_problem(m, dim, classes)
+    opt = make_optimizer("sgd", 1e-2)
+    pstate, spec = dsgd.init_panel_state(
+        init_params, opt, m, jax.random.PRNGKey(0), wire="int8_ef")
+    seg_fn = dsgd.make_panel_segment(loss_fn, opt, H, spec)
+    rng = np.random.default_rng(0)
+    Ws = jnp.asarray(np.stack([topology.random_matching(m, 1.0, rng),
+                               topology.fully_connected(m)]), jnp.float32)
+    bx = jnp.asarray(rng.normal(size=(2, H, m, 8, dim)).astype(np.float32))
+    by = jnp.asarray(rng.integers(0, classes,
+                                  size=(2, H, m, 8)).astype(np.int32))
+    ps, mets = seg_fn(pstate, (bx, by), Ws, jax.random.PRNGKey(1))
+    assert any(bool(jnp.any(v != 0.0)) for v in ps["wire_err"].values())
+    # int8 merge is approximate: rows agree to within a quantization step
+    tree = panel_mod.from_panel(ps["panel"], spec)
+    for x in jax.tree.leaves(tree):
+        np.testing.assert_allclose(np.asarray(x[0]), np.asarray(x[-1]),
+                                   atol=0.05)
+
+
+# --------------------------------------- folded consensus mean
+
+
+def test_mix_dense_mean_rows_bitexact_and_mean_matches():
+    """The 1^T/m-augmented matmul must leave the first m rows bit-identical
+    to plain mix_dense, and its extra row must equal the column mean of the
+    mixed panel for a doubly-stochastic W."""
+    m, d = 8, 96
+    pan = {"float32": _panel(m, d, 5)}
+    rng = np.random.default_rng(5)
+    W = np.zeros((m, m))
+    for _ in range(4):
+        W[np.arange(m), rng.permutation(m)] += 0.25
+    W = jnp.asarray(W, jnp.float32)
+    mixed, mean, _ = panel_mod.mix_dense_mean(pan, W)
+    plain = panel_mod.mix_dense(pan, W)
+    np.testing.assert_array_equal(np.asarray(mixed["float32"]),
+                                  np.asarray(plain["float32"]))
+    np.testing.assert_allclose(
+        np.asarray(mean["float32"]),
+        np.mean(np.asarray(mixed["float32"], np.float64), axis=0),
+        atol=1e-6)
+    np.testing.assert_allclose(
+        float(panel_mod.consensus_from_mean(mixed, mean)),
+        float(panel_mod.consensus_distance(mixed)), rtol=1e-5)
+    # Pallas fold path on a non-f32 group: the kernel stores its output
+    # in the payload dtype, but the mean must come back f32-precise (not
+    # rounded through the extra bf16 output row)
+    pan_bf = {"bfloat16": pan["float32"].astype(jnp.bfloat16)}
+    _, mean_bf, _ = panel_mod.mix_dense_mean(pan_bf, W, use_pallas=True)
+    np.testing.assert_allclose(
+        np.asarray(mean_bf["bfloat16"]),
+        np.mean(np.asarray(pan_bf["bfloat16"].astype(jnp.float32),
+                           np.float64), axis=0), atol=1e-5)
+
+
+# --------------------------------------------- codec-aware wire bytes
+
+
+def test_wire_bytes_codec_aware():
+    m, d = 4, 4096
+    tree = {"w": jnp.zeros((m, d), jnp.float32)}
+    spec = panel_mod.make_spec(tree)
+    assert spec.wire_bytes == 4 * d                       # f32 identity
+    assert panel_mod.with_wire(spec, "bf16").wire_bytes == 2 * d
+    i8 = panel_mod.with_wire(spec, "int8").wire_bytes
+    assert i8 == d + 4                                    # payload + scale
+    assert spec.wire_bytes / i8 >= 3.5                    # acceptance bar
+    assert panel_mod.with_wire(spec, "int8_ef").wire_bytes == i8
+
+
+def test_wire_policy_per_group_and_validation():
+    m = 2
+    tree = {"emb": jnp.zeros((m, 64), jnp.bfloat16),
+            "w": jnp.zeros((m, 128), jnp.float32)}
+    spec = panel_mod.make_spec(tree)
+    mixed = panel_mod.with_wire(spec, {"float32": "int8",
+                                       "bfloat16": "bf16"})
+    assert mixed.wire_of("float32") == "int8"
+    assert mixed.wire_of("bfloat16") == "bf16"
+    assert mixed.wire_bytes == (128 + 4) + 64 * 2
+    # unlisted groups fall back to the f32 identity (storage bytes)
+    part = panel_mod.with_wire(spec, {"float32": "int8"})
+    assert part.wire_of("bfloat16") == "f32"
+    assert part.wire_bytes == (128 + 4) + 64 * 2  # bf16 storage = 2B
+    with pytest.raises(ValueError, match="unknown wire codec"):
+        panel_mod.with_wire(spec, "int7")
+    with pytest.raises(ValueError, match="unknown dtype groups"):
+        panel_mod.with_wire(spec, {"fp32": "int8"})  # typo'd group key
+    with pytest.raises(ValueError, match="not both"):
+        panel_mod.mix_dense(panel_mod.to_panel(tree, mixed),
+                            jnp.eye(m), wire_dtype=jnp.bfloat16,
+                            spec=mixed)
+
+
+# ------------------------------------------------- kernel bit-parity
+
+
+@pytest.mark.parametrize("m,D,block_d", [(4, 64, 32), (8, 333, 128),
+                                         (3, 1000, 512)])
+@pytest.mark.parametrize("stochastic", [False, True])
+def test_wire_quant_kernels_match_ref(m, D, block_d, stochastic):
+    """Pallas quantize/dequantize (interpret mode) are bit-identical to
+    the kernels/ref.py oracles, including non-divisible D (padded tails)
+    and with the same uniform draws."""
+    x = _panel(m, D, seed=m * 1000 + D)
+    scale = ref_mod.int8_scale_ref(x)
+    u = (jax.random.uniform(jax.random.PRNGKey(0), x.shape, jnp.float32)
+         if stochastic else None)
+    q_k, s_k = wire_quant.quantize_int8_panel(x, scale, u,
+                                              block_d=block_d)
+    q_r = ref_mod.quantize_int8_ref(x, scale, u)
+    np.testing.assert_array_equal(np.asarray(q_k), np.asarray(q_r))
+    np.testing.assert_array_equal(np.asarray(s_k), np.asarray(scale))
+    deq_k = wire_quant.dequantize_int8_panel(q_k, scale, block_d=block_d)
+    np.testing.assert_array_equal(
+        np.asarray(deq_k), np.asarray(ref_mod.dequantize_int8_ref(q_r,
+                                                                  scale)))
+
+
+def test_codec_pallas_path_matches_xla_path():
+    """Int8Codec(use_pallas=True) must produce the same bits as the XLA
+    ref path given the same key (the kernels share the uniform input)."""
+    x = _panel(5, 200, 9)
+    key = jax.random.PRNGKey(11)
+    codec = wire_mod.get_codec("int8")
+    a, _, _ = codec.encode(x, key=key, use_pallas=False)
+    b, _, _ = codec.encode(x, key=key, use_pallas=True)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
