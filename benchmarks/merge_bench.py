@@ -1,0 +1,179 @@
+"""Merge-operator quality bench: what does the paper's SINGLE global
+merging gain from a richer operator under heterogeneity?
+
+Per operator (repro.merging — uniform/weighted/var/fisher/ties/swa) this
+trains the SAME decentralized run on the cpu-preset olmo-1b-family LM —
+synthetic non-IID token streams at Dirichlet alpha (default 0.1,
+the paper's hardest setting), independent inits, sparse random-matching
+gossip, final_merge schedule, identical seeds/batches/W sequence — with
+the operator installed on the spec (``init_panel_state(merger=...)``), so
+the one final global round is the ONLY thing that differs: the pre-merge
+trajectories are bit-identical (stat panels never touch the params).
+After the in-engine merge it records the merged model's eval loss on a
+held-out GLOBAL-mixture batch, next to the uniform baseline.
+
+``python -m benchmarks.merge_bench`` (add ``--merge ties,var`` for a
+subset — 'uniform' is always included as the reference) merges the
+records into BENCH_panel.json under "merge"; ``--artifact PATH``
+additionally writes the full per-operator record (committed as
+results/train/olmo-1b_merge_ops_a0.1.json). CI runs the ties,var smoke
+at a reduced round count.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import merging as merging_mod
+from repro.configs import get_config
+from repro.core import dsgd
+from repro.core import panel as panel_mod
+from repro.core.schedule import make_schedule
+from repro.data.synthetic import SyntheticLM, make_agent_lm_batches
+from repro.models import build_model
+from repro.optim import make_optimizer
+
+
+def _setup(arch, m, rounds, local_steps, batch, seq, alpha, lr, seed):
+    """Shared run inputs: config/model/opt + the identical W sequence and
+    batch stream every operator trains on."""
+    cfg = get_config(arch).reduced(d_model=128, layers=2, vocab=256)
+    model = build_model(cfg)
+    opt = make_optimizer("adamw", lr, weight_decay=5e-4,
+                         total_steps=rounds * local_steps)
+    sched = make_schedule("final_merge", m, rounds, prob=0.2, seed=seed)
+    Ws, glob = [], []
+    for t in range(rounds):
+        Ws.append(sched.mixing_matrix(t))
+        glob.append(sched.last_kind == "global")
+    Ws = jnp.asarray(np.stack(Ws), jnp.float32)
+    glob = jnp.asarray(glob)
+    lm = SyntheticLM(vocab=cfg.vocab_size, num_domains=8, seed=seed)
+    mixtures = lm.domain_mixtures(m, alpha, seed=seed + 1)
+    rng_np = np.random.default_rng(seed + 2)
+    per_round = []
+    for _ in range(rounds):
+        hs = [make_agent_lm_batches(lm, mixtures, batch, seq, rng_np)
+              for _ in range(local_steps)]
+        per_round.append({k: np.stack([h[k] for h in hs]) for k in hs[0]})
+    batches = {k: jnp.asarray(np.stack([r[k] for r in per_round]))
+               for k in per_round[0]}
+    # held-out eval batch from the GLOBAL (uniform) domain mixture
+    gmix = np.ones(lm.num_domains) / lm.num_domains
+    eval_batch = jax.tree.map(jnp.asarray, {
+        k: v[0] for k, v in make_agent_lm_batches(
+            lm, [gmix], 4 * batch, seq, np.random.default_rng(999)).items()})
+    return model, opt, Ws, glob, batches, eval_batch
+
+
+def run_operator(name, model, opt, Ws, glob, batches, eval_batch, m,
+                 local_steps, seed):
+    """One full e2e training run through make_panel_segment with the
+    operator on the spec; returns the record for BENCH_panel.json."""
+    state, spec = dsgd.init_panel_state(
+        model.init_params, opt, m, jax.random.PRNGKey(seed), merger=name)
+    seg_fn = dsgd.make_panel_segment(model.loss_fn, opt, local_steps, spec)
+    t0 = time.perf_counter()
+    state, mets = seg_fn(state, batches, Ws, jax.random.PRNGKey(seed + 1),
+                         None, glob)
+    mets = jax.device_get(mets)
+    # after the in-engine final merge all rows are identical; evaluate
+    # the merged model (row mean of an identical-row panel == the row)
+    merged = panel_mod.merged_tree(state["panel"], spec)
+    loss, _ = jax.jit(model.loss_fn)(merged, eval_batch, None)
+    dt = time.perf_counter() - t0
+    assert float(mets["consensus"][-1]) < 1e-3, (name, "merge did not run")
+    return {
+        "final_eval_loss": round(float(loss), 5),
+        "train_loss_last": round(float(mets["loss"][-1]), 5),
+        "consensus_pre_merge": round(float(mets["consensus"][-2]), 5),
+        "run_s": round(dt, 1),
+    }, state["panel"]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--merge", default="all",
+                    help="comma list of operators (repro.merging) or "
+                         "'all'; 'uniform' is always included as the "
+                         "reference")
+    ap.add_argument("--agents", type=int, default=8)
+    ap.add_argument("--rounds", type=int, default=24)
+    ap.add_argument("--local-steps", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--alpha", type=float, default=0.1)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--artifact", default="",
+                    help="also write the full per-operator record here "
+                         "(e.g. results/train/olmo-1b_merge_ops_a0.1.json)")
+    args = ap.parse_args()
+
+    if args.merge == "all":
+        names = sorted(merging_mod.MERGERS)
+    else:
+        names = sorted({"uniform", *args.merge.split(",")})
+        for n in names:
+            merging_mod.get_merger(n)
+
+    model, opt, Ws, glob, batches, eval_batch = _setup(
+        args.arch, args.agents, args.rounds, args.local_steps, args.batch,
+        args.seq, args.alpha, args.lr, args.seed)
+
+    records, panels = {}, {}
+    for name in names:
+        records[name], panels[name] = run_operator(
+            name, model, opt, Ws, glob, batches, eval_batch, args.agents,
+            args.local_steps, args.seed)
+    uni = records["uniform"]["final_eval_loss"]
+    for name in names:
+        r = records[name]
+        r["delta_vs_uniform"] = round(r["final_eval_loss"] - uni, 5)
+        r["merged_max_dev_vs_uniform"] = round(max(
+            float(jnp.max(jnp.abs(panels[name][k] - panels["uniform"][k])))
+            for k in panels[name]), 6)
+        # a zero deviation would mean the operator branch never ran and
+        # the round fell through to the plain gossip matmul (e.g. a
+        # regressed is_full detection) — uniform numbers under the
+        # operator's name
+        assert name == "uniform" or r["merged_max_dev_vs_uniform"] > 0, (
+            name, "operator produced the uniform merge — merge branch "
+                  "did not dispatch")
+        print(f"merge {name:9s}: eval={r['final_eval_loss']:.4f} "
+              f"(delta {r['delta_vs_uniform']:+.4f} vs uniform) "
+              f"dev={r['merged_max_dev_vs_uniform']:.4f} "
+              f"{r['run_s']}s", flush=True)
+
+    rec = {"backend": jax.default_backend(), "arch": args.arch,
+           "m": args.agents, "rounds": args.rounds,
+           "local_steps": args.local_steps, "alpha": args.alpha,
+           "lr": args.lr, "seed": args.seed, "schedule": "final_merge",
+           "operators": records}
+    out = {}
+    if os.path.exists("BENCH_panel.json"):
+        with open("BENCH_panel.json") as f:
+            out = json.load(f)
+    # REPLACE the whole section: operator records are only comparable
+    # within one invocation (same rounds/seed/batches), so merging a
+    # partial run into stale entries would mix incompatible configs
+    out["merge"] = rec
+    with open("BENCH_panel.json", "w") as f:
+        json.dump(out, f, indent=1)
+    print("wrote BENCH_panel.json")
+    if args.artifact:
+        os.makedirs(os.path.dirname(args.artifact) or ".", exist_ok=True)
+        with open(args.artifact, "w") as f:
+            json.dump(rec, f, indent=1)
+        print("wrote", args.artifact)
+
+
+if __name__ == "__main__":
+    main()

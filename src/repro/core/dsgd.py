@@ -32,6 +32,7 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from repro import merging as merging_mod
 from repro import wire as wire_mod
 from repro.core import gossip
 from repro.core import panel as panel_mod
@@ -229,8 +230,19 @@ def _wire_needs_key(spec) -> bool:
     return any(wire_mod.get_codec(name).needs_key for _, name in spec.wire)
 
 
+def _init_merge_stats(pan, spec):
+    """Fresh, spec-sharded statistics panels for the spec's merge operator
+    (None when the operator keeps no statistics)."""
+    mg = merging_mod.get_merger(spec.merger)
+    if not mg.stat_panels:
+        return None
+    return {name: panel_mod.shard_panel(stat, spec)
+            for name, stat in mg.init_stats(pan).items()}
+
+
 def init_panel_state(init_params: Callable, optimizer: Optimizer, m: int,
-                     rng, same_init: bool = False, mesh=None, wire=None):
+                     rng, same_init: bool = False, mesh=None, wire=None,
+                     merger=None):
     """Panel train state: params AND optimizer moments as per-dtype (m, D)
     panels. Returns (state, spec); the static spec is what turns panels
     back into model pytrees. The optimizer transforms are elementwise, so
@@ -244,13 +256,21 @@ def init_panel_state(init_params: Callable, optimizer: Optimizer, m: int,
     a codec name for every dtype group, or a per-group dict). An
     error-feedback codec adds ``state["wire_err"]`` — one zero-initialised
     f32 residual panel per dtype group, laid out exactly like the
-    parameter panel and donated through the segment scan."""
+    parameter panel and donated through the segment scan.
+
+    ``merger`` names the merge operator global rounds apply
+    (panel_mod.with_merger, repro.merging). A statistical operator
+    (var/fisher/swa) adds ``state["merge_stat"]`` — its per-agent f32
+    statistics panels, parameter-panel layout, donated through the scan
+    and updated by the segment driver."""
     params = _init_agent_params(init_params, m, rng, same_init)
     spec = panel_mod.make_spec(params)
     if mesh is not None:
         spec = panel_mod.shard_spec(spec, mesh)
     if wire is not None:
         spec = panel_mod.with_wire(spec, wire)
+    if merger is not None:
+        spec = panel_mod.with_merger(spec, merger)
     pan = panel_mod.to_panel(params, spec)
     opt_state = jax.vmap(optimizer.init)(pan)
     if spec.sharded:
@@ -263,6 +283,9 @@ def init_panel_state(init_params: Callable, optimizer: Optimizer, m: int,
         state["wire_err"] = panel_mod.shard_panel(
             {k: jnp.zeros(v.shape, jnp.float32) for k, v in pan.items()},
             spec)
+    mstat = _init_merge_stats(pan, spec)
+    if mstat is not None:
+        state["merge_stat"] = mstat
     return state, spec
 
 
@@ -285,12 +308,16 @@ def panel_state_shardings(state, spec):
     out = {"panel": group_sh(state["panel"]), "opt": opt, "step": repl}
     if "wire_err" in state:
         out["wire_err"] = group_sh(state["wire_err"])
+    if "merge_stat" in state:
+        out["merge_stat"] = {name: group_sh(v)
+                             for name, v in state["merge_stat"].items()}
     return out
 
 
 def panelize_state(state, spec):
     """Tree state (init_state) -> panel state (same numbers). A spec with
-    an error-feedback wire policy gets a fresh zero residual panel."""
+    an error-feedback wire policy gets a fresh zero residual panel; a
+    statistical merge operator gets fresh statistics panels."""
     opt = {k: (panel_mod.to_panel(v, spec) if k in _MOMENT_KEYS else v)
            for k, v in state["opt"].items()}
     pan = panel_mod.to_panel(state["params"], spec)
@@ -299,12 +326,15 @@ def panelize_state(state, spec):
         out["wire_err"] = panel_mod.shard_panel(
             {k: jnp.zeros(v.shape, jnp.float32) for k, v in pan.items()},
             spec)
+    mstat = _init_merge_stats(pan, spec)
+    if mstat is not None:
+        out["merge_stat"] = mstat
     return out
 
 
 def unpanelize_state(state, spec):
-    """Panel state -> tree state (same numbers; the wire_err residual is a
-    panel-engine carry and is dropped)."""
+    """Panel state -> tree state (same numbers; the wire_err residual and
+    merge_stat panels are panel-engine carries and are dropped)."""
     opt = {k: (panel_mod.from_panel(v, spec) if k in _MOMENT_KEYS else v)
            for k, v in state["opt"].items()}
     return {"params": panel_mod.from_panel(state["panel"], spec), "opt": opt,
@@ -318,10 +348,13 @@ def make_panel_segment(loss_fn: Callable, optimizer: Optimizer,
                        param_shardings=None, in_shardings=None):
     """Donated, scanned panel driver: one dispatch per SCHEDULE SEGMENT.
 
-    segment(state, batches, Ws, rng, active=None) -> (state, metrics) with
+    segment(state, batches, Ws, rng, active=None, global_rounds=None)
+    -> (state, metrics) with
       batches leaves (S, H, m, b, ...)  — H DISTINCT batches per round,
       Ws (S, m, m)                      — precomputed mixing matrices,
       active (S,) bool or None          — padding mask (see below),
+      global_rounds (S,) bool or None   — which rounds are GLOBAL (see
+                                          Merge operators below),
       metrics dict of (S,) arrays      — one device_get per segment.
 
     ``jax.lax.scan`` runs the S rounds (each an inner scan over the H
@@ -354,6 +387,27 @@ def make_panel_segment(loss_fn: Callable, optimizer: Optimizer,
     (state passes through untouched, metrics report 0) and their
     Ws/batches entries are ignored.
 
+    **Merge operators.** The spec's merge operator
+    (panel_mod.with_merger / init_panel_state(merger=...), repro.merging)
+    is applied on GLOBAL rounds (the paper's single final merging,
+    windowed/periodic AllReduce rounds). ``global_rounds`` marks them
+    explicitly — the launcher reads the schedule's own knowledge
+    (Schedule.last_kind). When None, the driver falls back to
+    fingerprinting W against the fully-connected 1/m matrix; that is
+    correct for every scheduler-emitted global round, but a gossip
+    topology can COINCIDE with the 1/m average (m=2 matched pair,
+    3-agent ring) and would then be routed through the operator — pass
+    the explicit mask when running non-uniform operators on such
+    topologies. 'uniform' keeps the byte-for-byte pre-subsystem path:
+    global rounds stay inside the same fused matmul as every other
+    round. A non-uniform operator dispatches those rounds through
+    ``merging.merge_panel`` (payload still wire-codec encoded; one merged
+    row broadcast back), and a STATISTICAL operator (var/fisher/swa)
+    carries its per-agent stats panels as ``state["merge_stat"]`` —
+    donated through the scan and updated every local step
+    (``update_local``: fisher sees the grad panel) and/or once per round
+    (``update_round``: var/swa see the param panel).
+
     On a sharded ``spec`` (shard_spec / init_panel_state(mesh=...)) every
     fused op keeps the panels in their mesh layout, so mixing lowers to
     per-fsdp-shard matmuls with agent-axis collectives that carry only the
@@ -366,12 +420,15 @@ def make_panel_segment(loss_fn: Callable, optimizer: Optimizer,
                          "wire policy (with_wire), not both")
     needs_key = wire_dtype is None and _wire_needs_key(spec)
     needs_ef = wire_dtype is None and _wire_needs_ef(spec)
+    merger = merging_mod.get_merger(spec.merger)
+    plain_merge = merger.name == "uniform"
+    needs_stats = bool(merger.stat_panels)
 
     def one(p, b, r):
         (l, aux), g = jax.value_and_grad(loss_fn, has_aux=True)(p, b, r)
         return g, l
 
-    def segment(state, batches, Ws, rng, active=None):
+    def segment(state, batches, Ws, rng, active=None, global_rounds=None):
         m = next(iter(state["panel"].values())).shape[0]
         S = Ws.shape[0]
         if needs_ef and "wire_err" not in state:
@@ -379,29 +436,46 @@ def make_panel_segment(loss_fn: Callable, optimizer: Optimizer,
                 "spec's wire policy uses error feedback but the state has "
                 "no 'wire_err' residual panel; build the state with "
                 "init_panel_state(..., wire=...)")
+        if needs_stats and "merge_stat" not in state:
+            raise ValueError(
+                f"spec's merge operator '{merger.name}' maintains "
+                "statistics panels but the state has no 'merge_stat'; "
+                "build the state with init_panel_state(..., merger=...)")
 
         def local_body(carry, xs):
-            pan, opt = carry
+            pan, opt, mstat = carry
             batch, r = xs
             rngs = jax.random.split(r, m)
             params = panel_mod.from_panel(pan, spec,
                                           leaf_shardings=param_shardings)
             grads, losses = jax.vmap(one)(params, batch, rngs)
             gpan = panel_mod.to_panel(grads, spec)
+            if not plain_merge and merger.local_stat:
+                mstat = merger.update_local(mstat, gpan)
             new_pan, new_opt = jax.vmap(optimizer.update)(gpan, opt, pan)
             gn = panel_mod.panel_norm(gpan, axis_mean=True)
-            return (new_pan, new_opt), (jnp.mean(losses), gn)
+            return (new_pan, new_opt, mstat), (jnp.mean(losses), gn)
 
-        def run_round(carry, W, batch_r, r):
-            pan, opt, werr = carry
+        def run_round(carry, W, batch_r, r, glob):
+            pan, opt, werr, mstat = carry
             rs = jax.random.split(r, local_steps)
-            (pan, opt), (losses, gns) = jax.lax.scan(
-                local_body, (pan, opt), (batch_r, rs))
+            (pan, opt, mstat), (losses, gns) = jax.lax.scan(
+                local_body, (pan, opt, mstat), (batch_r, rs))
+            if not plain_merge and merger.round_stat:
+                mstat = merger.update_round(mstat, pan)
             wkey = _wire_key(r, needs_key)
             # W == I rounds communicate nothing: skip the matmul AND the
             # codec (no payload travels, so nothing may be quantized and
             # the error-feedback residual must pass through untouched)
             idle = jnp.all(W == jnp.eye(m, dtype=W.dtype))
+            # non-uniform operators take over the GLOBAL rounds: the
+            # explicit per-round mask when given, else the W fingerprint
+            # (the 1/m matrix the schedulers emit for global merging —
+            # see the docstring caveat); after the broadcast every row
+            # is identical, so Xi == 0
+            is_full = (None if plain_merge else
+                       (glob if glob is not None else
+                        jnp.all(W == jnp.full((m, m), 1.0 / m, W.dtype))))
             kw = dict(wire_dtype=wire_dtype, use_pallas=use_pallas,
                       interpret=interpret, spec=spec, key=wkey)
 
@@ -419,8 +493,23 @@ def make_panel_segment(loss_fn: Callable, optimizer: Optimizer,
                         p, use_pallas=use_pallas, interpret=interpret,
                         spec=spec)
 
-                mixed, werr, xi = jax.lax.cond(
-                    idle, idle_fn, comm, (pan, werr))
+                def gossip_fn(args):
+                    return jax.lax.cond(idle, idle_fn, comm, args)
+
+                def merge_fn(args):
+                    p, e = args
+                    mixed, _, ne = merging_mod.merge_panel(
+                        p, merger, stats=mstat, spec=spec,
+                        wire_dtype=wire_dtype, key=wkey, err=e,
+                        use_pallas=use_pallas, interpret=interpret)
+                    return mixed, ne, jnp.zeros((), jnp.float32)
+
+                if plain_merge:
+                    mixed, werr, xi = jax.lax.cond(
+                        idle, idle_fn, comm, (pan, werr))
+                else:
+                    mixed, werr, xi = jax.lax.cond(
+                        is_full, merge_fn, gossip_fn, (pan, werr))
                 mets = {"loss": jnp.mean(losses), "grad_norm": gns[-1],
                         "consensus": xi}
             else:
@@ -430,38 +519,62 @@ def make_panel_segment(loss_fn: Callable, optimizer: Optimizer,
                         return panel_mod.mix_dense(p, W, err=e, **kw)
                     return panel_mod.mix_dense(p, W, **kw), e
 
-                mixed, werr = jax.lax.cond(
-                    idle, lambda a: a, comm, (pan, werr))
+                def gossip_fn(args):
+                    return jax.lax.cond(idle, lambda a: a, comm, args)
+
+                def merge_fn(args):
+                    p, e = args
+                    mixed, _, ne = merging_mod.merge_panel(
+                        p, merger, stats=mstat, spec=spec,
+                        wire_dtype=wire_dtype, key=wkey, err=e,
+                        use_pallas=use_pallas, interpret=interpret)
+                    return mixed, ne
+
+                if plain_merge:
+                    mixed, werr = jax.lax.cond(
+                        idle, lambda a: a, comm, (pan, werr))
+                else:
+                    mixed, werr = jax.lax.cond(
+                        is_full, merge_fn, gossip_fn, (pan, werr))
                 mets = {"loss": jnp.mean(losses), "grad_norm": gns[-1]}
-            return (mixed, opt, werr), mets
+            return (mixed, opt, werr, mstat), mets
 
         def round_body(carry, xs):
-            if active is None:
-                W, batch_r, r = xs
-                return run_round(carry, W, batch_r, r)
-            W, batch_r, r, act = xs
+            W, batch_r, r = xs[:3]
+            rest = xs[3:]
+            glob = rest[0] if global_rounds is not None else None
+            act = rest[-1] if active is not None else None
+            if act is None:
+                return run_round(carry, W, batch_r, r, glob)
 
             def inactive(c):
                 # zeros matching run_round's metric schema exactly
                 mets_sds = jax.eval_shape(
-                    lambda cc: run_round(cc, W, batch_r, r)[1], c)
+                    lambda cc: run_round(cc, W, batch_r, r, glob)[1], c)
                 return c, jax.tree.map(
                     lambda s: jnp.zeros(s.shape, s.dtype), mets_sds)
 
             return jax.lax.cond(
-                act, lambda c: run_round(c, W, batch_r, r), inactive, carry)
+                act, lambda c: run_round(c, W, batch_r, r, glob),
+                inactive, carry)
 
         rngs = jax.random.split(rng, S)
-        xs = ((Ws, batches, rngs) if active is None
-              else (Ws, batches, rngs, active))
+        xs = (Ws, batches, rngs)
+        if global_rounds is not None:
+            xs = xs + (global_rounds,)
+        if active is not None:
+            xs = xs + (active,)
         werr0 = state.get("wire_err") if needs_ef else None
-        (pan, opt, werr), metrics = jax.lax.scan(
-            round_body, (state["panel"], state["opt"], werr0), xs)
+        mstat0 = state.get("merge_stat") if needs_stats else None
+        (pan, opt, werr, mstat), metrics = jax.lax.scan(
+            round_body, (state["panel"], state["opt"], werr0, mstat0), xs)
         steps = (S if active is None
                  else jnp.sum(active.astype(jnp.int32))) * local_steps
         out = {"panel": pan, "opt": opt, "step": state["step"] + steps}
         if werr is not None:
             out["wire_err"] = werr
+        if mstat is not None:
+            out["merge_stat"] = mstat
         return out, metrics
 
     jit_kw = {} if in_shardings is None else {"in_shardings": in_shardings}

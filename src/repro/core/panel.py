@@ -34,6 +34,14 @@ the right lowering when leaves carry heterogeneous shardings
 path is validated/benchmarked against (tests/test_panel_sharded.py,
 benchmarks/panel_bench.py).
 
+**Merge operators.** :attr:`PanelSpec.merger` (:func:`with_merger`) names
+the operator GLOBAL rounds apply — uniform mean, weighted, inverse
+variance, diagonal Fisher, TIES, SWA (repro/merging). 'uniform' keeps the
+fused matmul path here bit-exact; non-uniform operators are dispatched by
+the segment driver (dsgd.make_panel_segment) through
+``merging.merge_panel``, which encodes the payload with the same wire
+policy and broadcasts one merged row.
+
 **Multi-device panels.** :func:`shard_spec` attaches a mesh and one
 PartitionSpec per dtype group to the spec — rows over the ('pod','agent')
 communication axes, the flat D columns over 'fsdp' (models/sharding.py:
@@ -84,6 +92,7 @@ class PanelSpec:
     mesh: Optional[jax.sharding.Mesh] = None
     pspecs: Tuple[Tuple[str, P], ...] = ()  # (dtype key, group PartitionSpec)
     wire: Tuple[Tuple[str, str], ...] = ()  # (dtype key, codec name) policy
+    merger: str = "uniform"                 # merge operator (repro.merging)
 
     @property
     def width(self) -> int:
@@ -192,6 +201,28 @@ def with_wire(spec: PanelSpec, wire) -> PanelSpec:
     return replace(spec, wire=tuple(sorted(mapping.items())))
 
 
+def with_merger(spec: PanelSpec, merger) -> PanelSpec:
+    """Attach a merge-operator name (repro.merging registry) to ``spec``:
+    the operator every GLOBAL round applies (the paper's single final
+    merging included). Validated here so a typo fails at spec-build time;
+    None resets to 'uniform'. Custom Merger INSTANCES cannot live on the
+    hashable spec — register them in ``merging.MERGERS`` or call
+    ``merging.merge_panel`` directly."""
+    if merger is None:
+        return replace(spec, merger="uniform")
+    from repro import merging as merging_mod
+    resolved = merging_mod.get_merger(merger)
+    if not isinstance(merger, str):
+        raise ValueError(
+            "with_merger takes a registry NAME (the spec stays hashable). "
+            "To use a custom-configured instance, register it first — "
+            f"merging.MERGERS['my_{resolved.name}'] = instance — and pass "
+            "that name; the registry default under "
+            f"{resolved.name!r} may carry different hyperparameters than "
+            "your instance")
+    return replace(spec, merger=resolved.name)
+
+
 def place(x, ns: Optional[NamedSharding]):
     """Pin one array to a sharding. Inside a trace this is a
     with_sharding_constraint (the SPMD partitioner boundary); on concrete
@@ -262,7 +293,12 @@ def _codecs(panel, spec: Optional[PanelSpec], wire_dtype):
     """Effective codec per dtype group for one communication op: the
     explicit legacy ``wire_dtype`` argument wins (and refuses to combine
     with a spec policy — one compression authority per call); else the
-    spec's wire policy; else the f32 identity."""
+    spec's wire policy; else the f32 identity.
+
+    NOTE: _codecs/_wire_keys/_pallas_ok/_constrain_group are the
+    engine-internal plumbing CONTRACT shared with repro/merging
+    (merge_panel runs the same encode→reduce→broadcast round as
+    global_merge); refactors here must keep those call sites in step."""
     if wire_dtype is not None:
         if spec is not None and spec.wire:
             raise ValueError("pass either wire_dtype= (legacy cast) or a "

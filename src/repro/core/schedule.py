@@ -31,13 +31,30 @@ from repro.core import topology as topo
 
 
 class Schedule:
-    """Base: sparse random-matching gossip every round."""
+    """Base: sparse random-matching gossip every round.
+
+    ``merger`` names the merge OPERATOR applied on this schedule's global
+    rounds (repro.merging: uniform/weighted/var/fisher/ties/swa) — for
+    FinalMergeSchedule that is the paper's single final merging itself.
+    The schedule only carries the name; the panel engine
+    (dsgd.make_panel_segment via PanelSpec.merger) applies it, and the
+    cost model is unchanged (every operator is one AllReduce-shaped
+    exchange)."""
 
     def __init__(self, m: int, rounds: int, kind: str = "random",
-                 prob: float = 0.2, seed: int = 0):
+                 prob: float = 0.2, seed: int = 0,
+                 merger: str = "uniform"):
         self.m, self.rounds = m, rounds
         self.sampler = topo.make_sampler(kind, m, prob)
         self.rng = np.random.default_rng(seed)
+        self.merger = merger
+        # kind of the last mixing_matrix() call: 'global' | 'idle' |
+        # 'gossip'. The launcher reads this to tell the panel engine
+        # WHICH rounds are global (dsgd.make_panel_segment
+        # global_rounds=): inferring it from the W values alone
+        # false-positives when a gossip matrix coincides with the 1/m
+        # average (m=2 matched pair, 3-ring, ...)
+        self.last_kind = None
 
     # -- override points ---------------------------------------------------
     def is_global(self, t: int, monitor: Optional[dict] = None) -> bool:
@@ -50,9 +67,12 @@ class Schedule:
     def mixing_matrix(self, t: int, monitor: Optional[dict] = None
                       ) -> np.ndarray:
         if self.is_global(t, monitor):
+            self.last_kind = "global"
             return topo.fully_connected(self.m)
         if self.is_local_only(t):
+            self.last_kind = "idle"
             return topo.identity(self.m)
+        self.last_kind = "gossip"
         return self.sampler(t, self.rng)
 
     def round_cost(self, W: np.ndarray) -> float:
@@ -87,7 +107,8 @@ class WindowedSchedule(Schedule):
 
 
 class FinalMergeSchedule(Schedule):
-    """The paper's method: sparse gossip + a single final global merging."""
+    """The paper's method: sparse gossip + a single final global merging
+    (performed by this schedule's ``merger`` operator)."""
 
     def is_global(self, t, monitor=None):
         return t == self.rounds - 1

@@ -66,3 +66,49 @@ def quantize_int8_ref(x, scale, u=None):
 def dequantize_int8_ref(q, scale):
     """q: (m, D) int8; scale: (m, 1) f32 -> f32 panel q * scale."""
     return q.astype(jnp.float32) * scale
+
+
+def weighted_colmerge_ref(x, w):
+    """x: (m, D) panel; w: (m, D) per-coordinate nonneg weights ->
+    (D,) f32 weighted column merge sum_k w_kj x_kj / sum_k w_kj.
+
+    Oracle for kernels/merge_ops.py:weighted_colmerge (the variance- and
+    Fisher-weighted merge operators). Callers keep the denominator
+    positive by folding their eps into w BEFORE the merge."""
+    x32 = x.astype(jnp.float32)
+    w32 = w.astype(jnp.float32)
+    return jnp.sum(w32 * x32, axis=0) / jnp.sum(w32, axis=0)
+
+
+def ties_thresh_ref(tau, trim):
+    """Per-agent-row magnitude threshold of the TIES trim step: keep the
+    top ``trim`` fraction of |tau| per row (trim=1.0 keeps everything).
+    tau: (m, D) deviations -> (m, 1) f32 thresholds (row quantiles).
+    Computed OUTSIDE the merge kernel (a full row pass, like the int8
+    scales in wire_quant)."""
+    if not 0.0 < trim <= 1.0:
+        raise ValueError(f"trim fraction must be in (0, 1], got {trim}")
+    mag = jnp.abs(tau.astype(jnp.float32))
+    return jnp.quantile(mag, 1.0 - trim, axis=1, keepdims=True)
+
+
+def ties_colmerge_ref(tau, thresh):
+    """TIES column merge of trimmed deviations (sign election + agreeing
+    mean). tau: (m, D) deviations from the reference row; thresh: (m, 1)
+    per-row magnitude thresholds (ties_thresh_ref) -> (D,) f32.
+
+    Per column j: trim entries below their row threshold, elect the sign
+    of the trimmed column sum (ties -> +), and average ONLY the surviving
+    entries that agree with the elected sign (the disjoint mean of TIES);
+    columns with no survivor merge to 0 (pure reference).
+
+    Oracle for kernels/merge_ops.py:ties_colmerge."""
+    t = tau.astype(jnp.float32)
+    keep = jnp.abs(t) >= thresh
+    tk = jnp.where(keep, t, 0.0)
+    col = jnp.sum(tk, axis=0)
+    s = jnp.where(col >= 0.0, 1.0, -1.0)
+    agree = (tk * s[None]) > 0.0
+    cnt = jnp.sum(agree.astype(jnp.float32), axis=0)
+    dev = jnp.sum(jnp.where(agree, tk, 0.0), axis=0)
+    return jnp.where(cnt > 0.0, dev / jnp.maximum(cnt, 1.0), 0.0)

@@ -38,9 +38,11 @@ import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro import merging as merging_mod
 from repro.checkpoint import save
 from repro.configs import get_config
 from repro.core import dsgd
+from repro.core import merge as merge_mod
 from repro.core import panel as panel_mod
 from repro.core.schedule import make_schedule
 from repro.data.synthetic import SyntheticLM, make_agent_lm_batches
@@ -116,6 +118,23 @@ def main():
                          "bytes, int8 cuts them ~4x (per-agent scales + "
                          "stochastic rounding), int8_ef adds error "
                          "feedback (an extra donated residual panel)")
+    ap.add_argument("--merge", default="uniform",
+                    choices=sorted(merging_mod.MERGERS),
+                    help="merge operator applied on global rounds "
+                         "(repro.merging): uniform mean, weighted "
+                         "(inverse consensus distance), var/fisher "
+                         "(per-coordinate precision weighting; extra "
+                         "donated stats panels), ties (sign election + "
+                         "trim), swa (merge of per-agent EMA "
+                         "accumulators)")
+    ap.add_argument("--eval-merged-every", type=int, default=0,
+                    help="counterfactual merged-model eval cadence in "
+                         "rounds (core.merge.counterfactual_eval with "
+                         "--merge's operator; Fig. 2c curves). 0 = once "
+                         "per segment (the previous behavior). NOTE: a "
+                         "nonzero cadence re-chops the scan segments, and "
+                         "the per-segment rng split means runs are only "
+                         "trajectory-comparable at the SAME cadence")
     ap.add_argument("--mesh", default="auto",
                     choices=["auto", "none", "train", "debug"],
                     help="shard the (m, D) panel on a training mesh: rows "
@@ -145,11 +164,21 @@ def main():
         batch_sharding = NamedSharding(mesh, P(None, None, ("pod", "agent")))
         print(f"panel sharded on mesh {dict(mesh.shape)}")
 
+    # the schedule carries the merge operator of its global rounds; the
+    # engine consumes it via the spec — sched.merger is the single source
+    kw = {"prob": 0.2, "seed": args.seed, "merger": args.merge}
+    if args.schedule == "windowed":
+        kw.update(start=args.window_start, end=args.window_end or
+                  args.rounds // 10)
+    sched = make_schedule(args.schedule, m, args.rounds, **kw)
+    seg_len = 1 if args.schedule == "adaptive" else max(1, args.segment)
+
     key = jax.random.PRNGKey(args.seed)
     state, spec = dsgd.init_panel_state(model.init_params, opt, m, key,
-                                        mesh=mesh, wire=args.wire)
+                                        mesh=mesh, wire=args.wire,
+                                        merger=sched.merger)
     print(f"wire codec {args.wire}: {spec.wire_bytes} B/agent per "
-          f"full-panel exchange")
+          f"full-panel exchange; merge operator {spec.merger}")
     segment_fn = dsgd.make_panel_segment(model.loss_fn, opt,
                                          args.local_steps, spec)
 
@@ -157,19 +186,16 @@ def main():
     mixtures = lm.domain_mixtures(m, args.alpha, seed=args.seed + 1)
     rng_np = np.random.default_rng(args.seed + 2)
 
-    kw = {"prob": 0.2, "seed": args.seed}
-    if args.schedule == "windowed":
-        kw.update(start=args.window_start, end=args.window_end or
-                  args.rounds // 10)
-    sched = make_schedule(args.schedule, m, args.rounds, **kw)
-    seg_len = 1 if args.schedule == "adaptive" else max(1, args.segment)
-
     def eval_loss(params, batches):
         l, _ = model.loss_fn(params, batches, None)
         return l
 
+    # counterfactual merged-model eval under the run's merge operator
+    # (var/fisher/swa read the engine's merge_stat panels); the panel
+    # variant keeps every op constrained to the spec's mesh layout
     eval_merged = jax.jit(
-        lambda pan, b: eval_loss(panel_mod.merged_tree(pan, spec), b))
+        lambda pan, mstat, b: merge_mod.counterfactual_eval_panel(
+            lambda p: eval_loss(p, b), pan, spec, stats=mstat))
     eval_local = jax.jit(
         lambda pan, b: jnp.mean(jax.vmap(eval_loss, in_axes=(0, None))(
             panel_mod.from_panel(pan, spec), b)))
@@ -186,18 +212,28 @@ def main():
     comm_cost = 0.0
     t0 = time.time()
     t = 0
+    ev = args.eval_merged_every
     while t < args.rounds:
         S = min(seg_len, args.rounds - t)
+        if ev > 0:  # chop segments at the eval cadence so the merged
+            # counterfactual is measured exactly every ``ev`` rounds
+            S = min(S, (t // ev + 1) * ev - t)
         pad = seg_len - S  # tail segment: pad to the common length so the
         # jitted scan is compiled ONCE (padded rounds are masked no-ops)
-        Ws, comm_after = [], []
+        Ws, comm_after, glob = [], [], []
         for s in range(S):
             W = sched.mixing_matrix(t + s, monitor)
             comm_cost += sched.round_cost(W)
             comm_after.append(comm_cost)
             Ws.append(W)
+            # the schedule KNOWS which rounds are global — tell the
+            # engine explicitly instead of fingerprinting W (a gossip
+            # matrix can coincide with the 1/m average at small m)
+            glob.append(sched.last_kind == "global")
         Ws += [np.eye(m)] * pad
+        glob += [False] * pad
         Ws = jnp.asarray(np.stack(Ws), jnp.float32)
+        glob = jnp.asarray(glob)
         batches = sample_segment_batches(lm, mixtures, S, args.local_steps,
                                          args.batch, args.seq, rng_np)
         if pad:
@@ -209,17 +245,23 @@ def main():
                        for k, v in batches.items()}
         active = jnp.asarray([True] * S + [False] * pad)
         key, k = jax.random.split(key)
-        state, mets = segment_fn(state, batches, Ws, k, active)
+        state, mets = segment_fn(state, batches, Ws, k, active, glob)
         mets = jax.device_get(mets)  # ONE transfer for the whole segment
         mets = {k: v[:S] for k, v in mets.items()}
         monitor = {"grad_norm": float(mets["grad_norm"][-1]),
                    "consensus": float(mets["consensus"][-1])}
-        merged_l = float(eval_merged(state["panel"], eval_batch))
-        local_l = float(eval_local(state["panel"], eval_batch))
+        # merged/local eval at the eval cadence (--eval-merged-every, or
+        # every segment end when 0) and always at the final round
+        do_eval = (ev == 0 or (t + S) % ev == 0 or t + S == args.rounds)
+        merged_l = local_l = None
+        if do_eval:
+            merged_l = float(eval_merged(state["panel"],
+                                         state.get("merge_stat"),
+                                         eval_batch))
+            local_l = float(eval_local(state["panel"], eval_batch))
         for s in range(S):
-            # merged/local eval is measured once per segment (at its end);
-            # intermediate rounds carry None so every record has the same
-            # schema
+            # eval is measured once per segment (at its end); intermediate
+            # rounds carry None so every record has the same schema
             last = s == S - 1
             history.append({"round": t + s,
                             "train_loss": float(mets["loss"][s]),
@@ -229,19 +271,26 @@ def main():
                             "local_eval": local_l if last else None,
                             "comm_cost_P": comm_after[s]})
         t += S
+        ev_txt = ("" if merged_l is None else
+                  f"local={local_l:.4f} merged={merged_l:.4f} ")
         print(f"[{t - 1:4d}] loss={history[-1]['train_loss']:.4f} "
-              f"local={local_l:.4f} merged={merged_l:.4f} "
-              f"Xi={monitor['consensus']:.3f} comm={comm_cost:.1f}P",
-              flush=True)
+              f"{ev_txt}Xi={monitor['consensus']:.3f} "
+              f"comm={comm_cost:.1f}P", flush=True)
     print(f"total {time.time()-t0:.1f}s")
 
     os.makedirs(args.out, exist_ok=True)
     tag = f"{args.arch}_{args.schedule}_a{args.alpha}"
+    if args.merge != "uniform":
+        tag += f"_m{args.merge}"
     with open(os.path.join(args.out, tag + ".json"), "w") as f:
         json.dump({"args": vars(args), "history": history}, f, indent=1)
     if args.save_merged:
-        save(args.save_merged, panel_mod.merged_tree(state["panel"], spec))
-        print("saved merged model to", args.save_merged)
+        # merge with the RUN'S operator (+ its stats), not the uniform
+        # mean — the checkpoint must be the model whose merged_eval the
+        # history just reported
+        save(args.save_merged, merge_mod.merged_panel_tree(
+            state["panel"], spec, stats=state.get("merge_stat")))
+        print(f"saved {spec.merger}-merged model to", args.save_merged)
 
 
 if __name__ == "__main__":

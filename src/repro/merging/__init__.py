@@ -1,0 +1,13 @@
+"""Merge-operator subsystem (see merging/ops.py for the contract).
+
+The panel engine (core/panel.py, core/dsgd.py) resolves the operator
+named on ``PanelSpec.merger`` (``panel.with_merger`` /
+``dsgd.init_panel_state(merger=...)``) through :func:`get_merger` and
+applies it on every GLOBAL round — including the paper's single final
+merging (``launch/train.py --merge``). The tree-level oracle lives in
+core/merge.py (``merge_stacked`` / ``counterfactual_eval(merger=...)``).
+"""
+from repro.merging.ops import (MERGERS, FisherMerger,  # noqa: F401
+                               Merger, SwaMerger, TiesMerger,
+                               UniformMerger, VarMerger, WeightedMerger,
+                               get_merger, merge_panel)

@@ -194,6 +194,111 @@ SEGMENT_SCRIPT = textwrap.dedent("""
 """)
 
 
+MERGE_SCRIPT = textwrap.dedent("""
+    import json
+    import jax, jax.numpy as jnp, numpy as np
+    from repro import merging
+    from repro.core import dsgd, topology
+    from repro.core import panel as panel_mod
+    from repro.launch import mesh as mesh_mod
+    from repro.optim import make_optimizer
+
+    mesh = mesh_mod.make_debug_mesh(agents=2, fsdp=2, model=2)
+    # m = 4 rows on the 2-device agent axis (2 rows/device): m = 2 would
+    # make TIES degenerate (pairwise deviations are exact +/-d, so the
+    # sign election ties and flips on f32 reassociation noise)
+    m, H, S, dim, classes = 4, 1, 2, 16, 4
+
+    def init_params(rng):
+        k1, _ = jax.random.split(rng)
+        return {"w": jax.random.normal(k1, (dim, classes)) * 0.1,
+                "b": jnp.zeros(classes)}
+
+    def loss_fn(p, batch, rng=None):
+        x, y = batch
+        lg = x @ p["w"] + p["b"]
+        nll = jnp.mean(jax.nn.logsumexp(lg, -1)
+                       - jnp.take_along_axis(lg, y[:, None], -1)[:, 0])
+        return nll, {}
+
+    opt = make_optimizer("adamw", 1e-2)
+    rng = np.random.default_rng(0)
+    # one forced pairwise exchange, then the operator's global merge
+    Ws = jnp.asarray(np.stack([topology.random_matching(m, 1.0, rng),
+                               topology.fully_connected(m)]), jnp.float32)
+    bx = jnp.asarray(rng.normal(size=(S, H, m, 8, dim)).astype(np.float32))
+    by = jnp.asarray(rng.integers(
+        0, classes, size=(S, H, m, 8)).astype(np.int32))
+
+    def run(name, use_mesh):
+        st, spec = dsgd.init_panel_state(
+            init_params, opt, m, jax.random.PRNGKey(0),
+            mesh=mesh if use_mesh else None, merger=name)
+        seg = dsgd.make_panel_segment(loss_fn, opt, H, spec)
+        ps, mets = seg(st, (bx, by), Ws, jax.random.PRNGKey(1))
+        return ps, mets, spec
+
+    from repro.core import merge as merge_mod
+    rec = {"segment": {}, "merge_row": {}}
+    for name in sorted(merging.MERGERS):
+        ps, mets, spec = run(name, True)
+        row_gap = max(float(jnp.max(jnp.abs(
+            x[0] - x[-1]))) for x in jax.tree.leaves(
+            panel_mod.from_panel(ps["panel"], spec)))
+        # jitted panel counterfactual on the mesh: the post-merge panel
+        # has identical rows, so EVERY operator's counterfactual must
+        # return ~row 0 (regression: a tree round-trip through a fresh
+        # unsharded spec miscompiles under the idle 'model' axis,
+        # doubling values — the engine-spec path must not)
+        cf = jax.jit(lambda p, s: merge_mod.merged_panel_tree(
+            p, spec, stats=s))(ps["panel"], ps.get("merge_stat"))
+        cf_gap = max(float(jnp.max(jnp.abs(
+            a.astype(jnp.float32) - b[0].astype(jnp.float32))))
+            for a, b in zip(jax.tree.leaves(cf), jax.tree.leaves(
+                panel_mod.from_panel(ps["panel"], spec))))
+        rec["segment"][name] = {
+            "consensus_final": float(mets["consensus"][-1]),
+            "row_gap": row_gap, "cf_panel_gap": cf_gap,
+            "finite": bool(all(jnp.all(jnp.isfinite(v))
+                               for v in ps["panel"].values()))}
+
+    # operator parity in isolation, sharded vs replicated, on a GENERIC
+    # mixed-dtype panel (rows independent: sign elections / thresholds
+    # are far from ties, unlike a freshly-gossiped panel whose paired
+    # deviations make TIES election a coin flip on reduction noise)
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    tree = {"w": jax.random.normal(ks[0], (4, 17, 7)),
+            "b": jax.random.normal(ks[1], (4, 9)),
+            "e": jax.random.normal(ks[2], (4, 34), jnp.bfloat16)}
+    repl_spec = panel_mod.make_spec(tree)
+    shard_specx = panel_mod.shard_spec(repl_spec, mesh)
+    pan_r = panel_mod.to_panel(tree, repl_spec)
+    pan_s = panel_mod.to_panel(tree, shard_specx)
+    for name in sorted(merging.MERGERS):
+        mg = merging.get_merger(name)
+        stats_r = mg.init_stats(pan_r) or None
+        if stats_r is not None and mg.round_stat:
+            fake = {k: v + 0.05 * jnp.sign(v).astype(v.dtype)
+                    for k, v in pan_r.items()}
+            stats_r = mg.update_round(stats_r, fake)
+        if stats_r is not None and mg.local_stat:
+            stats_r = mg.update_local(
+                stats_r, {k: 0.1 * v.astype(jnp.float32)
+                          for k, v in pan_r.items()})
+        stats_s = (None if stats_r is None else
+                   {n: {k: panel_mod.place(v, shard_specx.sharding(k))
+                        for k, v in s.items()}
+                    for n, s in stats_r.items()})
+        row_r = jax.jit(lambda p, s: mg.merge_row(
+            p, stats=s, spec=repl_spec))(pan_r, stats_r)
+        row_s = jax.jit(lambda p, s: mg.merge_row(
+            p, stats=s, spec=shard_specx))(pan_s, stats_s)
+        rec["merge_row"][name] = max(
+            float(jnp.max(jnp.abs(row_s[k] - row_r[k]))) for k in row_r)
+    print(json.dumps(rec))
+""")
+
+
 @pytest.fixture(scope="module")
 def parity():
     return run_multidevice(PARITY_SCRIPT, devices=8, timeout=420)
@@ -202,6 +307,11 @@ def parity():
 @pytest.fixture(scope="module")
 def segment():
     return run_multidevice(SEGMENT_SCRIPT, devices=8, timeout=420)
+
+
+@pytest.fixture(scope="module")
+def merge_ops():
+    return run_multidevice(MERGE_SCRIPT, devices=8, timeout=420)
 
 
 @pytest.mark.multidevice
@@ -265,3 +375,36 @@ class TestShardedPanelSegment:
     def test_init_state_places_tree_leaves(self, segment):
         # dsgd.init_state(shardings=...) put params + moments on the mesh
         assert segment["tree_state_placed"]
+
+
+@pytest.mark.multidevice
+@pytest.mark.merge
+class TestShardedMergeOperators:
+    """Every merge operator through make_panel_segment on the debug
+    training mesh: the global round collapses consensus, and the
+    D-sharded engine reproduces the replicated engine within the f32
+    reduction-reassociation noise the sharded GRAD compute already has
+    (uniform at that floor; the statistical operators add only their own
+    fsdp-partitioned column reductions on top)."""
+
+    def test_all_operators_segment_consensus_collapses(self, merge_ops):
+        for name, r in merge_ops["segment"].items():
+            assert r["consensus_final"] == 0.0, name
+            assert r["row_gap"] == 0.0, name
+            assert r["finite"], name
+
+    def test_jitted_panel_counterfactual_on_mesh(self, merge_ops):
+        # post-merge rows are identical, so the jitted counterfactual of
+        # ANY operator must return ~row 0; a tree round-trip through a
+        # fresh unsharded spec used to DOUBLE values under the idle
+        # 'model' axis — the engine-spec path (merged_panel_tree) must
+        # stay at the psum-ulp floor
+        for name, r in merge_ops["segment"].items():
+            assert r["cf_panel_gap"] < 1e-5, (name, r)
+
+    def test_merge_row_sharded_parity(self, merge_ops):
+        # the sharded mean lowers to a cross-device psum whose reduction
+        # order differs from the replicated sum by ~1 ulp; every operator
+        # must stay at that floor
+        for name, err in merge_ops["merge_row"].items():
+            assert err < 1e-5, (name, err)
