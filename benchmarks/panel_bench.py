@@ -29,13 +29,20 @@ matmul (panel.mix_dense_mean: W augmented with a 1^T/m row, the mean read
 off the extra output row, consensus_from_mean finishing with one deviation
 pass) — no separate full-panel mean reduce per round.
 
-``--wire {f32,bf16,int8,int8_ef,all}`` benches the quantized-wire codec
+``--wire <codec>[,<codec>...]|all`` benches the quantized-wire codec
 subsystem (repro/wire) on the default olmo-1b-family size: per codec it
-records the codec-aware wire bytes/agent/round (PanelSpec.wire_bytes),
-the bytes ratio vs f32, us_per_round, and the final-single-global-merge
-parity vs the f32 run — merged into BENCH_panel.json under "wire". The
-f32 codec row is asserted BIT-exact against the no-policy engine (the
-identity codec must not perturb the pre-codec path).
+records the codec-aware wire bytes/agent/round — both the VALUES payload
+(PanelSpec.wire_payload_bytes: packed int4 nibbles = 8x fewer than f32,
+top-k = 1/density x) and the payload+metadata total
+(wire_total_bytes: grouped scales, packed indices) — the byte ratios vs
+f32, us_per_round, and the final-single-global-merge parity vs the f32
+run — merged into BENCH_panel.json under "wire". The f32 codec row is
+asserted BIT-exact against the no-policy engine (the identity codec
+must not perturb the pre-codec path). The topk row also records its
+byte-model inputs (k, density, idx_bytes, gamma) per dtype group; its
+per-round bytes model the sparse gossip rounds — the single global
+merge is deliberately the full-bandwidth round (see
+wire/codec.py:TopKCodec).
 """
 from __future__ import annotations
 
@@ -224,12 +231,18 @@ def bench_sharded(m=16, d_model=256, layers=8, vocab=512, rounds=8, reps=3):
             "xi_parity_gap": round(abs(xi_repl - xi_shard), 6)}
 
 
-WIRE_CODECS = ("f32", "bf16", "int8", "int8_ef")
+WIRE_CODECS = ("f32", "bf16", "int8", "int8_ef", "int4", "int4_ef",
+               "topk")
 
-# documented tolerance for the int8 final-merge parity on the olmo-1b
-# reduced config: quantization error per element is <= one per-row scale
-# (amax/127), and both gossip mixing and the global merge are convex
-# combinations of rows, so the merged-model deviation stays O(scale).
+# documented tolerance for the quantized final-merge parity on the
+# olmo-1b reduced config: int8 error per element is <= one per-row scale
+# (amax/127), int4 one GROUP scale (amax_128cols/7), and both gossip
+# mixing and the global merge are convex combinations of rows, so the
+# merged-model deviation stays O(scale); the EF variants carry the
+# residual into the final exchange and land tighter. topk lands tightest
+# of all: its damped delta mix preserves the column mean exactly and its
+# global merge is the full-bandwidth round, so the merged model deviates
+# from f32 only by accumulated f32 rounding.
 WIRE_MERGE_TOL = 0.05
 
 
@@ -277,7 +290,9 @@ def bench_wire(codecs, m=16, d_model=256, layers=8, vocab=512, rounds=8,
     def fresh(codec):
         pan = {k: v + 0.0
                for k, v in panel_mod.to_panel(tree, base_spec).items()}
-        err = ({k: jnp.zeros_like(v, jnp.float32) for k, v in pan.items()}
+        # codec-seeded EF state (zeros for residuals, a panel copy for
+        # the topk mirror — matches dsgd.init_panel_state)
+        err = ({k: codec.init_err(v) for k, v in pan.items()}
                if codec is not None and codec.error_feedback else None)
         jax.block_until_ready(list(pan.values()))
         return pan, err
@@ -307,7 +322,9 @@ def bench_wire(codecs, m=16, d_model=256, layers=8, vocab=512, rounds=8,
         spec = panel_mod.with_wire(base_spec, name)
         merged, us = clock(make_seg(spec, codec), codec)
         if name == "f32":
-            f32 = {"merged": merged, "us": us, "bytes": spec.wire_bytes}
+            f32 = {"merged": merged, "us": us,
+                   "payload": spec.wire_payload_bytes,
+                   "total": spec.wire_total_bytes}
             gap = max(float(jnp.max(jnp.abs(a - merged_plain[k])))
                       for k, a in merged.items())
             assert gap == 0.0, (
@@ -318,13 +335,28 @@ def bench_wire(codecs, m=16, d_model=256, layers=8, vocab=512, rounds=8,
             for k, a in merged.items())
         assert merge_err <= WIRE_MERGE_TOL, (name, merge_err)
         out[name] = {
-            "wire_bytes_per_agent": spec.wire_bytes,
-            "bytes_ratio_vs_f32": round(f32["bytes"] / spec.wire_bytes, 2),
+            # per-agent bytes of one full-panel exchange: the quantized
+            # VALUES payload and the payload+metadata total (grouped
+            # int4 scales, packed top-k indices). For topk the per-round
+            # numbers model the k-sparse gossip rounds; its single
+            # global merge is the full-bandwidth round by design.
+            "wire_bytes_per_agent": spec.wire_total_bytes,
+            "payload_bytes_per_agent": spec.wire_payload_bytes,
+            "bytes_ratio_vs_f32": round(
+                f32["total"] / spec.wire_total_bytes, 2),
+            "payload_ratio_vs_f32": round(
+                f32["payload"] / spec.wire_payload_bytes, 2),
             "us_per_round": round(us, 1),
             "speedup_vs_f32": round(f32["us"] / us, 2),
             "merge_max_err_vs_f32": round(merge_err, 6),
             "merge_tol": WIRE_MERGE_TOL,
         }
+        if hasattr(codec, "k_of"):  # record the top-k byte model inputs
+            out[name]["topk_model"] = {
+                "density": codec.density, "gamma": codec.gamma,
+                "groups": {g: {"k": codec.k_of(w),
+                               "idx_bytes": codec.idx_bytes(w)}
+                           for g, w in base_spec.groups}}
     return {"backend": jax.default_backend(), "m": m, "D": base_spec.width,
             "rounds": rounds, "codecs": out}
 
@@ -341,12 +373,18 @@ def main():
     ap.add_argument("--sharded", action="store_true",
                     help="bench the fsdp-sharded panel on the debug mesh "
                          "(re-execs with forced host devices if needed)")
-    ap.add_argument("--wire", choices=WIRE_CODECS + ("all",),
-                    help="bench a wire codec (repro.wire) against the f32 "
-                         "identity: codec-aware bytes/agent/round + "
-                         "runtime + final-merge parity ('all' runs every "
-                         "codec)")
+    ap.add_argument("--wire",
+                    help="bench wire codecs (repro.wire) against the f32 "
+                         "identity: codec-aware bytes/agent/round "
+                         "(payload + total) + runtime + final-merge "
+                         "parity. A codec name, a comma-separated list "
+                         "('int8,int4,topk'), or 'all'")
     args = ap.parse_args()
+    if args.wire and args.wire != "all":
+        unknown = [c for c in args.wire.split(",") if c not in WIRE_CODECS]
+        if unknown:
+            ap.error(f"unknown wire codecs {unknown}; "
+                     f"known: {list(WIRE_CODECS)} or 'all'")
 
     if args.sharded and jax.device_count() < SHARDED_DEVICES:
         env = dict(os.environ)
@@ -365,14 +403,17 @@ def main():
                    "path (us_per_round)")
 
     if args.wire:
-        names = WIRE_CODECS if args.wire == "all" else (args.wire,)
+        names = (WIRE_CODECS if args.wire == "all"
+                 else tuple(args.wire.split(",")))
         rec = bench_wire(names, **SIZES["default"])
         wire = out.setdefault("wire", {})
         wire.update({k: v for k, v in rec.items() if k != "codecs"})
         wire.setdefault("codecs", {}).update(rec["codecs"])
         for name, r in rec["codecs"].items():
-            print(f"wire {name}: {r['wire_bytes_per_agent']}B/agent "
-                  f"({r['bytes_ratio_vs_f32']}x vs f32) "
+            print(f"wire {name}: {r['payload_bytes_per_agent']}B payload "
+                  f"/{r['wire_bytes_per_agent']}B total per agent "
+                  f"({r['payload_ratio_vs_f32']}x/"
+                  f"{r['bytes_ratio_vs_f32']}x vs f32) "
                   f"{r['us_per_round']:.0f}us/round "
                   f"merge_err={r['merge_max_err_vs_f32']}", flush=True)
     if args.sharded:

@@ -226,8 +226,22 @@ def _wire_needs_ef(spec) -> bool:
                for _, name in spec.wire)
 
 
+def _init_wire_err(pan, spec):
+    """Fresh spec-sharded error-feedback panels: each dtype group's codec
+    seeds its own state (zeros for the quantization residuals, a copy of
+    the panel for the topk mirror — Codec.init_err)."""
+    return panel_mod.shard_panel(
+        {k: wire_mod.get_codec(spec.wire_of(k)).init_err(v)
+         for k, v in pan.items()}, spec)
+
+
 def _wire_needs_key(spec) -> bool:
     return any(wire_mod.get_codec(name).needs_key for _, name in spec.wire)
+
+
+def _wire_has_delta(spec) -> bool:
+    return any(getattr(wire_mod.get_codec(name), "delta_mix", False)
+               for _, name in spec.wire)
 
 
 def _init_merge_stats(pan, spec):
@@ -254,9 +268,13 @@ def init_panel_state(init_params: Callable, optimizer: Optimizer, m: int,
 
     ``wire`` attaches a wire-codec policy to the spec (panel_mod.with_wire:
     a codec name for every dtype group, or a per-group dict). An
-    error-feedback codec adds ``state["wire_err"]`` — one zero-initialised
-    f32 residual panel per dtype group, laid out exactly like the
-    parameter panel and donated through the segment scan.
+    error-feedback codec adds ``state["wire_err"]`` — one f32 panel per
+    dtype group, laid out exactly like the parameter panel, seeded by the
+    group's codec (Codec.init_err) and donated through the segment scan.
+    For int8_ef/int4_ef that panel is the zero-initialised quantization
+    residual; for the topk codec it is the MIRROR x̂ — the receive-side
+    reconstruction every peer accumulates from past sparse innovations,
+    seeded with a copy of the initial panel (one full-precision sync).
 
     ``merger`` names the merge operator global rounds apply
     (panel_mod.with_merger, repro.merging). A statistical operator
@@ -280,9 +298,7 @@ def init_panel_state(init_params: Callable, optimizer: Optimizer, m: int,
     state = {"panel": pan, "opt": opt_state,
              "step": jnp.zeros((), jnp.int32)}
     if _wire_needs_ef(spec):
-        state["wire_err"] = panel_mod.shard_panel(
-            {k: jnp.zeros(v.shape, jnp.float32) for k, v in pan.items()},
-            spec)
+        state["wire_err"] = _init_wire_err(pan, spec)
     mstat = _init_merge_stats(pan, spec)
     if mstat is not None:
         state["merge_stat"] = mstat
@@ -323,9 +339,7 @@ def panelize_state(state, spec):
     pan = panel_mod.to_panel(state["params"], spec)
     out = {"panel": pan, "opt": opt, "step": state["step"]}
     if _wire_needs_ef(spec):
-        out["wire_err"] = panel_mod.shard_panel(
-            {k: jnp.zeros(v.shape, jnp.float32) for k, v in pan.items()},
-            spec)
+        out["wire_err"] = _init_wire_err(pan, spec)
     mstat = _init_merge_stats(pan, spec)
     if mstat is not None:
         out["merge_stat"] = mstat
@@ -367,12 +381,15 @@ def make_panel_segment(loss_fn: Callable, optimizer: Optimizer,
     **Wire codecs.** The spec's wire policy (panel_mod.with_wire /
     init_panel_state(wire=...)) compresses the gossip payload; the legacy
     ``wire_dtype`` cast survives as an explicit override (not both). A
-    stochastic codec (int8) draws its per-round key by folding a fixed tag
-    into the round rng, so the local-step key schedule — and therefore any
-    non-stochastic run — is bit-identical to the pre-codec engine. An
-    error-feedback codec (int8_ef) carries ``state["wire_err"]`` (from
-    init_panel_state) through the scan as one more donated panel; it is
-    updated only on communicating rounds.
+    stochastic codec (int8/int4) draws its per-round key by folding a
+    fixed tag into the round rng, so the local-step key schedule — and
+    therefore any non-stochastic run — is bit-identical to the pre-codec
+    engine. An error-feedback codec (int8_ef/int4_ef residuals, the topk
+    mirror) carries ``state["wire_err"]`` (from init_panel_state) through
+    the scan as one more donated panel; it is updated only on
+    communicating rounds — idle W = I rounds bypass the codec entirely
+    for EVERY codec family, so the residual/mirror passes through
+    untouched and the round stays bit-exact.
 
     **Folded consensus.** With ``monitor=True`` the per-round consensus
     mean rides the mixing matmul itself (an extra 1^T/m row on W —
@@ -421,7 +438,12 @@ def make_panel_segment(loss_fn: Callable, optimizer: Optimizer,
     needs_key = wire_dtype is None and _wire_needs_key(spec)
     needs_ef = wire_dtype is None and _wire_needs_ef(spec)
     merger = merging_mod.get_merger(spec.merger)
-    plain_merge = merger.name == "uniform"
+    # a delta (mirror) codec must route GLOBAL rounds through
+    # merging.merge_panel even for the uniform operator: the one-shot
+    # merge is its full-bandwidth round (panel.global_merge delta rule)
+    # and cannot stay inside the sparse damped fused matmul
+    plain_merge = (merger.name == "uniform"
+                   and not (wire_dtype is None and _wire_has_delta(spec)))
     needs_stats = bool(merger.stat_panels)
 
     def one(p, b, r):

@@ -18,13 +18,18 @@ per dtype group instead of one op per leaf:
 
 ``wire_dtype`` optionally casts parameters to bf16 for the communication
 only (beyond-paper compression lever; see EXPERIMENTS.md §Perf). ``wire``
-(a codec name from repro.wire — 'f32', 'bf16', 'int8', 'int8_ef') routes
-the payload through the quantized-wire codec subsystem instead; the
-stochastic int8 codecs need an explicit ``key``. On the per-leaf ``*_tree``
-path codecs apply leaf-by-leaf (each leaf reshaped to its (m, size) panel,
-so int8 scales are per-agent-per-LEAF — finer than the panel engine's
-per-agent-per-dtype-group scales; the two paths agree exactly only for
-scale-free codecs like f32/bf16).
+(a codec name from repro.wire — 'f32', 'bf16', 'int8', 'int8_ef',
+'int4', 'int4_ef', 'topk') routes the payload through the quantized-wire
+codec subsystem instead; the stochastic int8/int4 codecs need an
+explicit ``key``. On the per-leaf ``*_tree`` path codecs apply
+leaf-by-leaf (each leaf reshaped to its (m, size) panel, so int8 scales
+are per-agent-per-LEAF and int4 group scales tile each leaf separately —
+finer than the panel engine's per-dtype-group layout; the two paths
+agree exactly only for scale-free codecs like f32/bf16). Codecs that
+carry state are panel-engine-only and refused here: error feedback
+(int8_ef/int4_ef) needs the residual panel, and the mirror-carrying
+topk codec additionally mixes in delta form, which the per-leaf path
+does not implement.
 
 The per-leaf originals survive as ``*_tree``: they are the reference the
 panel path is validated/benchmarked against, and the right lowering when
@@ -107,6 +112,14 @@ def _leaf_codec(wire_dtype, wire):
             f"codec '{codec.name}' needs an error-feedback residual, which "
             "the per-leaf tree path cannot carry; use the panel engine "
             "(dsgd.make_panel_segment) or a residual-free codec ('int8')")
+    if getattr(codec, "delta_mix", False):
+        # unreachable for the registry codecs (topk is error_feedback and
+        # refused above) but guards future residual-free delta codecs:
+        # this path mixes W @ payload, not x + (W - I) @ mirror
+        raise ValueError(
+            f"codec '{codec.name}' mixes in delta (mirror) form, which "
+            "the per-leaf tree path does not implement; use the panel "
+            "engine (dsgd.make_panel_segment)")
     return codec
 
 

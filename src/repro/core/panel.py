@@ -21,13 +21,20 @@ the panel instead of one op per pytree leaf:
 
 **Wire codecs.** Every communication op compresses its payload through the
 pluggable codec subsystem (repro/wire): ``f32`` identity, ``bf16`` cast
-(the original lever), ``int8`` per-row scales + stochastic rounding, and
-``int8_ef`` adding error feedback. The per-dtype-group policy lives on the
-spec (:func:`with_wire` — e.g. embeddings stay bf16 while dense blocks go
-int8) and :attr:`PanelSpec.wire_bytes` reports the codec-aware payload;
-the legacy ``wire_dtype=`` argument on the mix ops survives as an explicit
+(the original lever), ``int8``/``int8_ef`` per-row scales + stochastic
+rounding (+ error feedback), ``int4``/``int4_ef`` packed nibbles with
+grouped scales, and ``topk`` sparse innovations over a mirror panel. The
+per-dtype-group policy lives on the spec (:func:`with_wire` — e.g.
+embeddings stay bf16 while dense blocks go int8) and
+:attr:`PanelSpec.wire_payload_bytes` / :attr:`wire_total_bytes` report
+the codec-aware payload and payload+metadata wire cost; the legacy
+``wire_dtype=`` argument on the mix ops survives as an explicit
 per-call cast override. Stochastic codecs take an explicit ``key=``;
-error feedback threads a residual panel via ``err=``. The per-leaf
+error feedback threads a residual panel via ``err=``. A ``delta_mix``
+codec (topk) breaks the single W @ payload matmul: its sparse payload
+reconstructs a mirror panel and the mix runs in damped delta form
+``x + gamma (W - I) @ x̂`` — the first codec whose mixing cannot lower
+to one dense MXU pass over the payload. The per-leaf
 tree-map originals survive in core/gossip.py as ``*_tree`` — they remain
 the right lowering when leaves carry heterogeneous shardings
 (launch/dryrun.py pod meshes), and they are the parity oracle the panel
@@ -107,15 +114,31 @@ class PanelSpec:
         return "f32"
 
     @property
-    def wire_bytes(self) -> int:
-        """Per-agent payload bytes of one full-panel exchange, CODEC-aware:
-        an int8 group pays 1 byte/scalar + its per-row scale, a bf16 wire
-        2 bytes/scalar, and only the f32 identity codec pays the storage
-        itemsize (the old behavior, which over-reported compressed wires
-        by the storage/wire ratio)."""
+    def wire_payload_bytes(self) -> int:
+        """Per-agent wire bytes of the quantized VALUES alone for one
+        full-panel exchange: packed int4 nibbles pay D/2, int8 one byte
+        per scalar, top-k only its k values — scale/index metadata
+        excluded (see :attr:`wire_total_bytes`)."""
         return sum(
             wire_mod.get_codec(self.wire_of(k)).payload_bytes(1, w, k)
             for k, w in self.groups)
+
+    @property
+    def wire_total_bytes(self) -> int:
+        """Per-agent wire bytes INCLUDING codec metadata — per-row int8
+        scales, grouped int4 scales, packed top-k indices. This is what
+        actually crosses the interconnect per exchange."""
+        return sum(
+            wire_mod.get_codec(self.wire_of(k)).total_bytes(1, w, k)
+            for k, w in self.groups)
+
+    @property
+    def wire_bytes(self) -> int:
+        """Back-compat alias of :attr:`wire_total_bytes` (codec-aware:
+        an int8 group pays 1 byte/scalar + its per-row scale, a bf16 wire
+        2 bytes/scalar, and only the f32 identity codec pays the storage
+        itemsize)."""
+        return self.wire_total_bytes
 
     @property
     def sharded(self) -> bool:
@@ -180,8 +203,9 @@ def shard_spec(spec: PanelSpec, mesh, row_axes=None, col_axes=None
 def with_wire(spec: PanelSpec, wire) -> PanelSpec:
     """Attach a wire-codec policy to ``spec``.
 
-    ``wire`` is a codec name applied to EVERY dtype group ('f32', 'bf16',
-    'int8', 'int8_ef'), or a {dtype-group: codec-name} dict for per-group
+    ``wire`` is a codec name applied to EVERY dtype group (a
+    ``repro.wire.CODECS`` key: 'f32', 'bf16', 'int8', 'int8_ef', 'int4',
+    'int4_ef', 'topk'), or a {dtype-group: codec-name} dict for per-group
     policies (unlisted groups fall back to 'f32'); None clears the policy.
     Names are validated here so a typo fails at spec-build time, not
     mid-trace."""
@@ -372,6 +396,44 @@ def _mix_dense_groups(panel, W, *, wire_dtype, use_pallas, block_d,
         xw, back, ne = codecs[k].encode(x, key=keys[k], err=e,
                                         use_pallas=pallas,
                                         interpret=interpret)
+        if getattr(codecs[k], "delta_mix", False):
+            # sparse-innovation codecs (topk): xw is the updated MIRROR
+            # panel and the mix runs in CHOCO's damped delta form
+            # x + gamma (W - I) @ x̂ — a round trips through a
+            # scatter-reconstructed mirror + one delta matmul instead of
+            # the single dense W @ payload MXU pass (a sparse payload
+            # mixed as W @ Q(x) would zero every untransmitted
+            # coordinate, and an undamped pull on a stale mirror
+            # diverges — see TopKCodec.gamma). Doubly-stochastic W
+            # preserves the column mean EXACTLY for any gamma: the
+            # sparsification error lives in the per-agent deviations
+            # only, so the eventual global merge absorbs it. The
+            # consensus mean is read off the mixed panel itself: the
+            # transmitted mirror never enters the mean.
+            x32 = x.astype(jnp.float32)
+            Wd = W32 - jnp.eye(m, dtype=jnp.float32)
+            if pallas:
+                d32 = gossip_mix_panel(Wd, xw, block_d=block_d,
+                                       interpret=interpret)
+            else:
+                d32 = Wd @ xw.astype(jnp.float32)
+            gamma = getattr(codecs[k], "gamma", 1.0)
+            y32 = x32 + gamma * d32.astype(jnp.float32)
+            yb = back(y32)
+            if with_mean:
+                mu = jnp.mean(y32, axis=0)
+                if not fold:
+                    mu = _constrain_group(mu, spec, k, merged_panel=True)
+            if idle_rows is not None:
+                yb = jnp.where(idle_rows, x, yb)
+                if e is not None:
+                    ne = jnp.where(idle_rows, e, ne)
+            mixed[k] = _constrain_group(yb, spec, k)
+            if with_mean:
+                means[k] = mu
+            if err is not None:
+                new_err[k] = _constrain_group(ne, spec, k)
+            continue
         # the Pallas kernel stores its output in the payload dtype, which
         # would round the folded mean row for non-f32 payloads — those
         # groups skip the augmented row (no wasted kernel work) and take
@@ -458,8 +520,15 @@ def mix_pairwise(panel, partner, weight=0.5, *, wire_dtype=None,
         e = err[k] if err is not None else None
         xw, back, ne = codecs[k].encode(x, key=keys[k], err=e)
         peer = jnp.take(xw, partner, axis=0)
-        y = jnp.where(idle, x,
-                      back((1.0 - weight) * xw + weight * peer))
+        if getattr(codecs[k], "delta_mix", False):
+            # mirror codecs exchange in damped delta form: pull toward
+            # the partner's mirror, keep the untransmitted rest of x
+            gamma = getattr(codecs[k], "gamma", 1.0)
+            mixed = back(x.astype(jnp.float32)
+                         + gamma * weight * (peer - xw))
+        else:
+            mixed = back((1.0 - weight) * xw + weight * peer)
+        y = jnp.where(idle, x, mixed)
         if e is not None:
             ne = jnp.where(idle, e, ne)
         return _constrain_group(y, spec, k), ne
@@ -476,12 +545,26 @@ def global_merge(panel, *, wire_dtype=None,
                  spec: Optional[PanelSpec] = None, key=None, err=None):
     """theta_k <- mean_l theta_l: one mean-reduce + broadcast per group.
     Sharded: an all-reduce over the agent axes per fsdp column shard.
-    Wire codecs as in :func:`mix_dense`."""
+    Wire codecs as in :func:`mix_dense` — EXCEPT delta (mirror) codecs:
+    a sparse payload cannot sync a one-shot merge, so the global merge
+    is their FULL-BANDWIDTH round by design (the paper's point is to
+    concentrate the budget into the single global merging): the exact
+    panel travels, the merge is bit-identical to the uncompressed one,
+    and the mirror is reset to the post-merge state."""
     codecs = _codecs(panel, spec, wire_dtype)
     keys = _wire_keys(codecs, key)
 
     def one(k, x):
         e = err[k] if err is not None else None
+        if getattr(codecs[k], "delta_mix", False):
+            if e is None:
+                raise ValueError(
+                    f"codec '{codecs[k].name}' carries a mirror panel and "
+                    "needs it (err=...)")
+            x32 = x.astype(jnp.float32)
+            y32 = jnp.broadcast_to(
+                jnp.mean(x32, axis=0, keepdims=True), x32.shape)
+            return (_constrain_group(y32.astype(x.dtype), spec, k), y32)
         xw, back, ne = codecs[k].encode(x, key=keys[k], err=e)
         mean = jnp.mean(xw.astype(jnp.float32), axis=0, keepdims=True)
         y = back(jnp.broadcast_to(mean, xw.shape).astype(xw.dtype))

@@ -155,9 +155,21 @@ class AdaptiveEdgeSchedule(Schedule):
         return hit
 
 
-def make_schedule(name: str, m: int, rounds: int, **kw) -> Schedule:
-    table = {"constant": ConstantSchedule, "local": LocalOnlySchedule,
-             "windowed": WindowedSchedule, "final_merge": FinalMergeSchedule,
+SCHEDULES = {"constant": ConstantSchedule, "local": LocalOnlySchedule,
+             "windowed": WindowedSchedule,
+             "final_merge": FinalMergeSchedule,
              "periodic": PeriodicGlobalSchedule,
              "adaptive": AdaptiveEdgeSchedule}
-    return table[name](m, rounds, **kw)
+
+
+def make_schedule(name: str, m: int, rounds: int, **kw) -> Schedule:
+    """Build a scheduler by registry name (``SCHEDULES`` — the registry
+    the property suite round-trips; mirrors wire.CODECS /
+    merging.MERGERS)."""
+    try:
+        cls = SCHEDULES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown schedule {name!r}; known: {sorted(SCHEDULES)}"
+        ) from None
+    return cls(m, rounds, **kw)

@@ -68,6 +68,88 @@ def dequantize_int8_ref(q, scale):
     return q.astype(jnp.float32) * scale
 
 
+def int4_group_scale_ref(x, group: int = 128):
+    """Grouped symmetric int4 scales for an (m, D) panel: one amax/7 scale
+    per row per ``group``-column block -> (m, ceil(D/group)) f32. A
+    partial tail group reduces over its real columns only; all-zero
+    groups map to scale 1/7 (dequantization stays a plain multiply)."""
+    m, D = x.shape
+    gn = -(-D // group)
+    pad = gn * group - D
+    mag = jnp.abs(x.astype(jnp.float32))
+    if pad:
+        mag = jnp.pad(mag, ((0, 0), (0, pad)))
+    amax = jnp.max(mag.reshape(m, gn, group), axis=2)
+    return jnp.where(amax > 0, amax, 1.0) / 7.0
+
+
+def expand_group_scale(scale, D: int, group: int = 128):
+    """(m, ceil(D/group)) grouped scales -> (m, D): each scale repeated
+    over its column group (tail group truncated to the real width)."""
+    return jnp.repeat(scale, group, axis=1)[:, :D]
+
+
+def quantize_int4_ref(x, scale, u=None, group: int = 128):
+    """x: (m, D); scale: (m, ceil(D/group)) f32 -> int8 values in [-7, 7]
+    (the int4 staging dtype before nibble packing).
+
+    Oracle for kernels/wire_quant.py:quantize_int4_panel. ``u`` (same
+    shape as x, uniform [0, 1)) selects stochastic rounding
+    floor(x/scale + u); ``u=None`` rounds to nearest."""
+    s = x.astype(jnp.float32) / expand_group_scale(scale, x.shape[1], group)
+    q = jnp.floor(s + u) if u is not None else jnp.round(s)
+    return jnp.clip(q, -7.0, 7.0).astype(jnp.int8)
+
+
+def dequantize_int4_ref(q, scale, group: int = 128):
+    """q: (m, D) int4-valued int8; scale: (m, ceil(D/group)) f32 -> f32."""
+    return (q.astype(jnp.float32)
+            * expand_group_scale(scale, q.shape[1], group))
+
+
+def pack_int4_ref(q):
+    """(m, D) int4-valued int8 -> (m, ceil(D/2)) uint8 packed nibbles:
+    even column in the LOW nibble, odd column in the HIGH nibble (an odd
+    tail packs against a zero nibble). This IS the wire byte layout —
+    two quantized values per byte."""
+    m, D = q.shape
+    if D % 2:
+        q = jnp.pad(q, ((0, 0), (0, 1)))
+    pair = q.reshape(m, -1, 2).astype(jnp.uint8) & 0xF
+    return (pair[:, :, 0] | (pair[:, :, 1] << 4)).astype(jnp.uint8)
+
+
+def unpack_int4_ref(p, D: int):
+    """(m, ceil(D/2)) uint8 packed nibbles -> (m, D) int8, sign-extended
+    ((n ^ 8) - 8 maps the nibble back to [-8, 7]). Exact inverse of
+    pack_int4_ref for values in [-8, 7]."""
+    m = p.shape[0]
+    lo = (p & 0xF).astype(jnp.int8)
+    hi = ((p >> 4) & 0xF).astype(jnp.int8)
+    q = jnp.stack([lo, hi], axis=2).reshape(m, -1)[:, :D]
+    return ((q ^ 8) - 8).astype(jnp.int8)
+
+
+def topk_threshold_ref(x, k: int):
+    """Per-row magnitude threshold of the top-k sparsifier: the k-th
+    largest |x| per row. x: (m, D) -> (m, 1) f32. Computed OUTSIDE the
+    sparsify kernel (a full row pass, like the int8 scales)."""
+    mag = jnp.abs(x.astype(jnp.float32))
+    vals = jax.lax.top_k(mag, k)[0]
+    return vals[:, -1:]
+
+
+def sparsify_topk_ref(x, thresh):
+    """Zero every entry whose magnitude is below its row threshold.
+    x: (m, D); thresh: (m, 1) f32 -> f32 panel.
+
+    Oracle for kernels/wire_quant.py:sparsify_topk_panel. Ties AT the
+    threshold all survive (measure-zero for continuous inputs; the wire
+    payload accounting assumes exactly k survivors per row)."""
+    x32 = x.astype(jnp.float32)
+    return jnp.where(jnp.abs(x32) >= thresh, x32, 0.0)
+
+
 def weighted_colmerge_ref(x, w):
     """x: (m, D) panel; w: (m, D) per-coordinate nonneg weights ->
     (D,) f32 weighted column merge sum_k w_kj x_kj / sum_k w_kj.

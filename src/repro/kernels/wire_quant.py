@@ -1,11 +1,16 @@
-"""Pallas TPU kernels for the quantized-wire codec: int8 panel (de)quant.
+"""Pallas TPU kernels for the quantized-wire codecs: int8/int4 panel
+(de)quant, int4 nibble (un)packing, and the top-k sparsifier.
 
-The wire codec's hot ops on an (m, D) parameter panel: quantize each
+The wire codecs' hot ops on an (m, D) parameter panel: quantize each
 agent's row to int8 against a per-row symmetric scale (optionally with
-stochastic rounding), and dequantize back to f32 on the receive side.
-TPU adaptation mirrors kernels/gossip_mix.py: D is tiled into VMEM blocks
-(``block_d`` columns), the tiny (m, 1) scale column is resident per grid
-step, math in f32 on the VPU.
+stochastic rounding), to int4 against GROUPED per-row/per-``group``-column
+scales with the values packed two-per-byte on the wire, sparsify a row to
+its top-k-magnitude entries against a per-row threshold, and dequantize
+back to f32 on the receive side. TPU adaptation mirrors
+kernels/gossip_mix.py: D is tiled into VMEM blocks (``block_d`` columns),
+the tiny per-row scale/threshold columns are resident per grid step, math
+in f32 on the VPU. The int4 ``block_d`` is snapped to a multiple of the
+scale group so each grid step sees whole groups.
 
 Randomness: stochastic rounding is floor(x/scale + u) with u uniform in
 [0, 1). The portable entry point takes ``u`` as an INPUT panel (threaded
@@ -16,18 +21,22 @@ the TPU-only variant that draws the bits on-chip from a scalar seed
 (``pltpu.prng_random_bits``), saving the (m, D) uniform input's HBM
 traffic on real hardware.
 
-Scales are computed OUTSIDE the kernels (``kernels/ref.py:
-int8_scale_ref`` — one cheap XLA row-reduce): the row amax needs a full
-pass over D before any block can quantize, so fusing it in would force a
-second grid sweep for no bandwidth win.
+Scales and top-k thresholds are computed OUTSIDE the kernels
+(``kernels/ref.py``: int8_scale_ref / int4_group_scale_ref /
+topk_threshold_ref — cheap XLA row-reduces): the row amax / k-th-largest
+needs a full pass over D before any block can quantize, so fusing it in
+would force a second grid sweep for no bandwidth win.
 """
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.ref import int8_scale_ref
+from repro.kernels.ref import (int4_group_scale_ref, int8_scale_ref,
+                               topk_threshold_ref)
 
 
 def _round_kernel(x_ref, s_ref, o_ref):
@@ -146,4 +155,191 @@ def dequantize_int8_panel(q, scale, *, block_d: int = 512,
         out_shape=jax.ShapeDtypeStruct((m, Dp), jnp.float32),
         interpret=interpret,
     )(qp, scale)
+    return out[:, :D]
+
+
+# --------------------------------------------------------------- int4
+
+
+def _int4_blocking(D: int, group: int, block_d: int):
+    """block_d snapped to a whole number of scale groups (>= one group)."""
+    bd = max(group, (min(block_d, max(D, 1)) // group) * group)
+    return bd
+
+
+def _pad_group_scale(scale, Dp: int, group: int):
+    """Pad grouped scales to cover the column-padded panel (pad groups
+    get scale 1.0 — their values are zero, so any nonzero scale works)."""
+    gp = Dp // group
+    pad = gp - scale.shape[1]
+    return (jnp.pad(scale, ((0, 0), (0, pad)), constant_values=1.0)
+            if pad else scale)
+
+
+def _round4_kernel(group, x_ref, s_ref, o_ref):
+    se = jnp.repeat(s_ref[...], group, axis=1)
+    s = x_ref[...].astype(jnp.float32) / se
+    o_ref[...] = jnp.clip(jnp.round(s), -7.0, 7.0).astype(jnp.int8)
+
+
+def _stoch4_kernel(group, x_ref, s_ref, u_ref, o_ref):
+    se = jnp.repeat(s_ref[...], group, axis=1)
+    s = x_ref[...].astype(jnp.float32) / se
+    o_ref[...] = jnp.clip(jnp.floor(s + u_ref[...]),
+                          -7.0, 7.0).astype(jnp.int8)
+
+
+def _dequant4_kernel(group, q_ref, s_ref, o_ref):
+    se = jnp.repeat(s_ref[...], group, axis=1)
+    o_ref[...] = q_ref[...].astype(jnp.float32) * se
+
+
+def quantize_int4_panel(x, scale=None, u=None, *, group: int = 128,
+                        block_d: int = 512, interpret: bool = True):
+    """x: (m, D) float panel -> (q int4-valued int8 (m, D),
+    scale (m, ceil(D/group)) f32).
+
+    ``scale`` defaults to the grouped amax/7 (int4_group_scale_ref); one
+    scale per row per ``group`` columns is resident per grid step and
+    broadcast over its group on the VPU. ``u`` (uniform [0, 1), shape of
+    x) switches round-to-nearest to stochastic rounding."""
+    m, D = x.shape
+    if scale is None:
+        scale = int4_group_scale_ref(x, group)
+    bd = _int4_blocking(D, group, block_d)
+    xp, Dp = _pad_cols(x, bd)
+    nd = Dp // bd
+    sp = _pad_group_scale(scale, Dp, group)
+    sg = bd // group
+    scale_spec = pl.BlockSpec((m, sg), lambda i: (0, i))
+    data_spec = pl.BlockSpec((m, bd), lambda i: (0, i))
+    if u is None:
+        kernel = functools.partial(_round4_kernel, group)
+        ops, in_specs = (xp, sp), [data_spec, scale_spec]
+    else:
+        up, _ = _pad_cols(u, bd)
+        kernel = functools.partial(_stoch4_kernel, group)
+        ops, in_specs = (xp, sp, up), [data_spec, scale_spec, data_spec]
+    q = pl.pallas_call(
+        kernel,
+        grid=(nd,),
+        in_specs=in_specs,
+        out_specs=data_spec,
+        out_shape=jax.ShapeDtypeStruct((m, Dp), jnp.int8),
+        interpret=interpret,
+    )(*ops)
+    return q[:, :D], scale
+
+
+def dequantize_int4_panel(q, scale, *, group: int = 128,
+                          block_d: int = 512, interpret: bool = True):
+    """q: (m, D) int4-valued int8; scale (m, ceil(D/group)) f32 -> f32."""
+    m, D = q.shape
+    bd = _int4_blocking(D, group, block_d)
+    qp, Dp = _pad_cols(q, bd)
+    nd = Dp // bd
+    sp = _pad_group_scale(scale, Dp, group)
+    sg = bd // group
+    out = pl.pallas_call(
+        functools.partial(_dequant4_kernel, group),
+        grid=(nd,),
+        in_specs=[
+            pl.BlockSpec((m, bd), lambda i: (0, i)),
+            pl.BlockSpec((m, sg), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((m, bd), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((m, Dp), jnp.float32),
+        interpret=interpret,
+    )(qp, sp)
+    return out[:, :D]
+
+
+def _pack4_kernel(x_ref, o_ref):
+    m, bd = x_ref.shape
+    pair = x_ref[...].reshape(m, bd // 2, 2).astype(jnp.uint8) & 0xF
+    o_ref[...] = (pair[:, :, 0] | (pair[:, :, 1] << 4)).astype(jnp.uint8)
+
+
+def _unpack4_kernel(p_ref, o_ref):
+    m, bp = p_ref.shape
+    p = p_ref[...]
+    lo = (p & 0xF).astype(jnp.int8)
+    hi = ((p >> 4) & 0xF).astype(jnp.int8)
+    q = jnp.stack([lo, hi], axis=2).reshape(m, bp * 2)
+    o_ref[...] = ((q ^ 8) - 8).astype(jnp.int8)
+
+
+def pack_int4_panel(q, *, block_d: int = 512, interpret: bool = True):
+    """(m, D) int4-valued int8 -> (m, ceil(D/2)) uint8 packed nibbles
+    (even column low, odd column high — the wire byte layout). Matches
+    kernels/ref.py:pack_int4_ref bit-for-bit."""
+    m, D = q.shape
+    bd = max(2, (min(block_d, max(D, 2)) // 2) * 2)
+    qp, Dp = _pad_cols(q, bd)
+    nd = Dp // bd
+    out = pl.pallas_call(
+        _pack4_kernel,
+        grid=(nd,),
+        in_specs=[pl.BlockSpec((m, bd), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((m, bd // 2), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((m, Dp // 2), jnp.uint8),
+        interpret=interpret,
+    )(qp)
+    return out[:, :(D + 1) // 2]
+
+
+def unpack_int4_panel(p, D: int, *, block_d: int = 512,
+                      interpret: bool = True):
+    """(m, ceil(D/2)) uint8 packed nibbles -> (m, D) int8, sign-extended.
+    Exact inverse of pack_int4_panel."""
+    m, P = p.shape
+    bp = max(1, min(block_d // 2, P))
+    pp, Pp = _pad_cols(p, bp)
+    nd = Pp // bp
+    out = pl.pallas_call(
+        _unpack4_kernel,
+        grid=(nd,),
+        in_specs=[pl.BlockSpec((m, bp), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((m, bp * 2), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((m, Pp * 2), jnp.int8),
+        interpret=interpret,
+    )(pp)
+    return out[:, :D]
+
+
+# -------------------------------------------------------------- top-k
+
+
+def _sparsify_kernel(x_ref, t_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    o_ref[...] = jnp.where(jnp.abs(x) >= t_ref[...], x, 0.0)
+
+
+def sparsify_topk_panel(x, thresh=None, *, k: int = None,
+                        block_d: int = 512, interpret: bool = True):
+    """Zero every entry below its per-row top-k magnitude threshold.
+
+    ``thresh`` (m, 1) defaults to the k-th largest |x| per row
+    (topk_threshold_ref — computed outside the kernel like the int8
+    scales). The threshold column is resident per grid step; zero-padded
+    tail columns stay zero. Matches sparsify_topk_ref bit-for-bit."""
+    m, D = x.shape
+    if thresh is None:
+        if k is None:
+            raise ValueError("sparsify_topk_panel needs thresh= or k=")
+        thresh = topk_threshold_ref(x, k)
+    bd = min(block_d, D)
+    xp, Dp = _pad_cols(x, bd)
+    nd = Dp // bd
+    out = pl.pallas_call(
+        _sparsify_kernel,
+        grid=(nd,),
+        in_specs=[
+            pl.BlockSpec((m, bd), lambda i: (0, i)),
+            pl.BlockSpec((m, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((m, bd), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((m, Dp), jnp.float32),
+        interpret=interpret,
+    )(xp, thresh)
     return out[:, :D]

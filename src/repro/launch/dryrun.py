@@ -25,6 +25,11 @@ Variants (the §Perf levers; "baseline" is the paper-faithful config):
                 PanelSpec.wire_bytes — the SPMD collectives still move
                 dequantized f32 shards today, see ROADMAP "True int8
                 collectives")
+  panel_int4wire  panel engine with the packed-nibble int4 wire codec
+                (grouped scales; modelled payload /8 on f32 groups)
+  panel_topkwire  panel engine with the top-k sparse-innovation codec
+                (mirror panel as the EF state; the mix lowers to the
+                delta form x + (W - I) @ mirror, not one dense matmul)
 """
 
 import argparse  # noqa: E402
@@ -169,7 +174,9 @@ def build_train_panel(cfg, shape, multi_pod, variant, scan=True):
     key = jax.random.PRNGKey(0)
 
     wire = ("bf16" if "bf16wire" in variant
-            else "int8" if "int8wire" in variant else None)
+            else "int8" if "int8wire" in variant
+            else "int4" if "int4wire" in variant
+            else "topk" if "topkwire" in variant else None)
     params_sds = jax.eval_shape(
         lambda k: dsgd._init_agent_params(model.init_params, m, k, False),
         key)

@@ -39,6 +39,7 @@ from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro import merging as merging_mod
+from repro import wire as wire_mod
 from repro.checkpoint import save
 from repro.configs import get_config
 from repro.core import dsgd
@@ -113,11 +114,14 @@ def main():
     ap.add_argument("--alpha", type=float, default=0.1,
                     help="Dirichlet heterogeneity")
     ap.add_argument("--wire", default="f32",
-                    choices=["f32", "bf16", "int8", "int8_ef"],
+                    choices=sorted(wire_mod.CODECS),
                     help="gossip wire codec (repro.wire): bf16 halves wire "
                          "bytes, int8 cuts them ~4x (per-agent scales + "
-                         "stochastic rounding), int8_ef adds error "
-                         "feedback (an extra donated residual panel)")
+                         "stochastic rounding), int4 ~8x (packed nibbles, "
+                         "grouped scales), *_ef adds error feedback (an "
+                         "extra donated residual panel), topk ships only "
+                         "the k largest innovations per agent against a "
+                         "mirror panel (error feedback built in)")
     ap.add_argument("--merge", default="uniform",
                     choices=sorted(merging_mod.MERGERS),
                     help="merge operator applied on global rounds "
@@ -177,7 +181,8 @@ def main():
     state, spec = dsgd.init_panel_state(model.init_params, opt, m, key,
                                         mesh=mesh, wire=args.wire,
                                         merger=sched.merger)
-    print(f"wire codec {args.wire}: {spec.wire_bytes} B/agent per "
+    print(f"wire codec {args.wire}: {spec.wire_payload_bytes} B/agent "
+          f"payload ({spec.wire_total_bytes} B with scales/indices) per "
           f"full-panel exchange; merge operator {spec.merger}")
     segment_fn = dsgd.make_panel_segment(model.loss_fn, opt,
                                          args.local_steps, spec)

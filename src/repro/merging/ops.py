@@ -55,6 +55,7 @@ import jax.numpy as jnp
 from repro.core import panel as panel_mod
 from repro.kernels import merge_ops as merge_kernels
 from repro.kernels import ref as ref_mod
+from repro.wire import codec as wire_codec
 
 
 class Merger:
@@ -361,6 +362,7 @@ def merge_panel(panel, merger, *, stats=None, weights=None, spec=None,
     EF residual (None when ``err`` is)."""
     merger = get_merger(merger)
     pallas = panel_mod._pallas_ok(use_pallas, spec)
+    delta = {k: False for k in panel}
     if merger.uses_panel:
         codecs = panel_mod._codecs(panel, spec, wire_dtype)
         keys = panel_mod._wire_keys(codecs, key)
@@ -368,6 +370,22 @@ def merge_panel(panel, merger, *, stats=None, weights=None, spec=None,
         new_err = {} if err is not None else None
         for k, x in panel.items():
             e = err[k] if err is not None else None
+            if getattr(codecs[k], "delta_mix", False):
+                # delta (mirror) codecs: a sparse payload cannot sync a
+                # one-shot merge, so the GLOBAL round is their
+                # full-bandwidth round (panel.global_merge delta rule):
+                # the operator sees the exact panel and the mirror is
+                # reset to the post-merge state below. The mirror is
+                # still REQUIRED — a caller without it would leave the
+                # next delta mix pulling on an arbitrarily stale mirror
+                if e is None:
+                    raise ValueError(
+                        f"codec '{codecs[k].name}' carries a mirror "
+                        "panel and needs it (err=...)")
+                delta[k] = True
+                enc[k] = x.astype(jnp.float32)
+                backs[k] = wire_codec._storage_back(x.dtype)
+                continue
             xw, back, ne = codecs[k].encode(x, key=keys[k], err=e,
                                             use_pallas=pallas,
                                             interpret=interpret)
@@ -384,6 +402,13 @@ def merge_panel(panel, merger, *, stats=None, weights=None, spec=None,
                            interpret=interpret)
     mixed = {}
     for k, x in panel.items():
+        if delta[k]:
+            y32 = jnp.broadcast_to(row[k][None], x.shape)
+            mixed[k] = panel_mod._constrain_group(backs[k](y32), spec, k)
+            if new_err is not None:
+                new_err[k] = panel_mod._constrain_group(
+                    y32.astype(jnp.float32), spec, k)
+            continue
         y = backs[k](jnp.broadcast_to(row[k][None], x.shape)
                      .astype(enc[k].dtype))
         mixed[k] = panel_mod._constrain_group(y, spec, k)

@@ -5,5 +5,6 @@ The panel engine (core/panel.py) resolves a per-dtype-group policy — a
 ``panel.with_wire`` — through :func:`get_codec`; everything here is
 engine-agnostic (the per-leaf ``gossip.*_tree`` oracle path uses the
 same codecs per leaf)."""
-from repro.wire.codec import (CODECS, DtypeCodec, F32Codec,  # noqa: F401
-                              Int8Codec, dtype_codec, get_codec)
+from repro.wire.codec import (CODECS, Codec, DtypeCodec,  # noqa: F401
+                              F32Codec, Int4Codec, Int8Codec, TopKCodec,
+                              dtype_codec, get_codec)

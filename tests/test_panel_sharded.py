@@ -299,9 +299,79 @@ MERGE_SCRIPT = textwrap.dedent("""
 """)
 
 
+WIRE_SEGMENT_SCRIPT = textwrap.dedent("""
+    import json
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core import dsgd, topology
+    from repro.launch import mesh as mesh_mod
+    from repro.optim import make_optimizer
+
+    mesh = mesh_mod.make_debug_mesh(agents=2, fsdp=2, model=2)
+    m, H, S, dim, classes = 4, 2, 3, 12, 4
+
+    def init_params(rng):
+        k1, _ = jax.random.split(rng)
+        return {"w": jax.random.normal(k1, (dim, classes)) * 0.1,
+                "b": jnp.zeros(classes)}
+
+    def loss_fn(p, batch, rng=None):
+        x, y = batch
+        lg = x @ p["w"] + p["b"]
+        nll = jnp.mean(jax.nn.logsumexp(lg, -1)
+                       - jnp.take_along_axis(lg, y[:, None], -1)[:, 0])
+        return nll, {}
+
+    opt = make_optimizer("adamw", 1e-2)
+    r3 = np.random.default_rng(0)
+    bx = jnp.asarray(r3.normal(size=(S, H, m, 8, dim)).astype(np.float32))
+    by = jnp.asarray(r3.integers(0, classes,
+                                 size=(S, H, m, 8)).astype(np.int32))
+    r3 = np.random.default_rng(3)
+    Ws = jnp.asarray(np.stack([topology.random_matching(m, 1.0, r3),
+                               topology.fully_connected(m),
+                               topology.random_matching(m, 1.0, r3)]),
+                     jnp.float32)
+    glob = jnp.asarray([False, True, False])
+
+    def run(wire, use_mesh):
+        ps, spec = dsgd.init_panel_state(
+            init_params, opt, m, jax.random.PRNGKey(0),
+            mesh=mesh if use_mesh else None, wire=wire)
+        seg = dsgd.make_panel_segment(loss_fn, opt, H, spec)
+        out, mets = seg(ps, (bx, by), Ws, jax.random.PRNGKey(1), None,
+                        glob)
+        return out, mets
+
+    rec = {}
+    for wire in ("int4", "int4_ef", "topk"):
+        out_r, mets_r = run(wire, False)
+        out_s, mets_s = run(wire, True)
+        gap = max(float(jnp.max(jnp.abs(
+            out_s["panel"][k].astype(jnp.float32)
+            - out_r["panel"][k].astype(jnp.float32))))
+            for k in out_r["panel"])
+        egap = (max(float(jnp.max(jnp.abs(
+            out_s["wire_err"][k] - out_r["wire_err"][k])))
+            for k in out_r["wire_err"])
+            if "wire_err" in out_r else None)
+        rec[wire] = {
+            "panel_gap": gap, "err_gap": egap,
+            "consensus_global": float(mets_s["consensus"][1]),
+            "finite": bool(np.all(np.isfinite(
+                np.asarray(mets_s["loss"])))),
+        }
+    print(json.dumps(rec))
+""")
+
+
 @pytest.fixture(scope="module")
 def parity():
     return run_multidevice(PARITY_SCRIPT, devices=8, timeout=420)
+
+
+@pytest.fixture(scope="module")
+def wire_segment():
+    return run_multidevice(WIRE_SEGMENT_SCRIPT, devices=8, timeout=420)
 
 
 @pytest.fixture(scope="module")
@@ -375,6 +445,28 @@ class TestShardedPanelSegment:
     def test_init_state_places_tree_leaves(self, segment):
         # dsgd.init_state(shardings=...) put params + moments on the mesh
         assert segment["tree_state_placed"]
+
+
+@pytest.mark.multidevice
+@pytest.mark.wire
+class TestShardedWireCodecSegments:
+    """int4/int4_ef/topk through make_panel_segment on the debug training
+    mesh: the D-sharded engine reproduces the replicated engine at the
+    psum-ulp floor (the partitionable-threefry draw and the delta-mix
+    matmul must not depend on the partitioning), the EF/mirror panels
+    agree, and the global round collapses consensus (int4 within its
+    quantization step; topk exactly — its merge is the full-bandwidth
+    round)."""
+
+    def test_sharded_segment_matches_replicated(self, wire_segment):
+        for name, r in wire_segment.items():
+            assert r["finite"], name
+            assert r["panel_gap"] <= 2e-6, (name, r)
+            if r["err_gap"] is not None:
+                assert r["err_gap"] <= 2e-6, (name, r)
+
+    def test_topk_global_round_collapses_consensus(self, wire_segment):
+        assert wire_segment["topk"]["consensus_global"] == 0.0
 
 
 @pytest.mark.multidevice

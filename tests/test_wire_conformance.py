@@ -1,0 +1,335 @@
+"""Codec conformance suite: one parametrized harness over EVERY entry in
+``repro.wire.CODECS``.
+
+Each test body is codec-GENERIC — it reads only the shared contract
+surface (``needs_key`` / ``error_feedback`` / ``delta_mix`` attributes,
+``payload_bytes`` / ``total_bytes`` / ``wire_payload`` accounting,
+``residual`` / ``init_err`` error-feedback state mapping) and never
+branches on a codec's NAME. Registering a new codec in ``CODECS`` is all
+it takes to put it under the full contract:
+
+* idle W = I rounds are bit-exact through the segment driver (the codec
+  is skipped entirely; the EF state passes through untouched);
+* ``payload_bytes`` / ``total_bytes`` match the ``.nbytes`` of the
+  actual encoded wire arrays, and ``PanelSpec.wire_payload_bytes`` /
+  ``wire_total_bytes`` agree with the codec's own accounting;
+* the error-feedback residual is bounded by the carried signal per
+  encode and telescopes over rounds of a constant input (the
+  time-averaged transmitted view converges to the input);
+* stochastic rounding is unbiased in expectation over PRNG keys
+  (empirical-standard-error bound, so no codec-specific scale enters
+  the harness); deterministic codecs are key-invariant;
+* the Pallas kernel path is bit-identical to the XLA/ref path;
+* draws are bit-identical eager vs jitted (and sharded vs replicated
+  when the host has devices to shard over) — the
+  ``threefry_partitionable`` contract;
+* idle ROWS of a dense mix (unmatched agents) keep exact parameters and
+  EF state; a global merge collapses the consensus distance.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import wire as wire_mod
+from repro.core import dsgd
+from repro.core import panel as panel_mod
+from repro.optim import make_optimizer
+from test_panel import _segment_inputs, _toy_problem
+
+pytestmark = pytest.mark.wire
+
+CODEC_NAMES = sorted(wire_mod.CODECS)
+
+
+def _panel(m, d, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(m, d)) * scale, jnp.float32)
+
+
+def _key_for(codec, seed=0):
+    return jax.random.PRNGKey(seed) if codec.needs_key else None
+
+
+def _err_for(codec, x, cold: bool = False):
+    """Engine-faithful EF state (codec.init_err), or a COLD state seeded
+    from a zero panel — nonvacuous for mirror codecs whose warm init
+    already matches the input."""
+    if not codec.error_feedback:
+        return None
+    return codec.init_err(jnp.zeros_like(x) if cold else x)
+
+
+# ------------------------------------------------------------ registry
+
+
+@pytest.mark.parametrize("name", CODEC_NAMES)
+def test_registry_contract(name):
+    codec = wire_mod.get_codec(name)
+    assert codec is wire_mod.CODECS[name]
+    assert codec.name == name
+    assert wire_mod.get_codec(codec) is codec  # instance pass-through
+    assert isinstance(codec.needs_key, bool)
+    assert isinstance(codec.error_feedback, bool)
+    assert isinstance(codec.delta_mix, bool)
+    m, d = 3, 257
+    pb = codec.payload_bytes(m, d, jnp.float32)
+    tb = codec.total_bytes(m, d, jnp.float32)
+    assert 0 < pb <= tb
+    # accounting is per-row linear: rows scale the byte counts exactly
+    assert codec.payload_bytes(2 * m, d, jnp.float32) == 2 * pb
+    assert codec.total_bytes(2 * m, d, jnp.float32) == 2 * tb
+
+
+# ----------------------------------------------------- byte accounting
+
+
+@pytest.mark.parametrize("name", CODEC_NAMES)
+def test_payload_bytes_match_encoded_size(name):
+    """payload_bytes/total_bytes must equal the .nbytes of the ACTUAL
+    wire arrays (odd width exercises nibble/index packing tails), and
+    the spec-level accounting must agree with the codec's."""
+    codec = wire_mod.get_codec(name)
+    m, d = 3, 333
+    x = _panel(m, d, seed=5)
+    payload, meta = codec.wire_payload(x, key=_key_for(codec),
+                                       err=_err_for(codec, x, cold=True))
+    pb = sum(int(a.nbytes) for a in payload)
+    tb = pb + sum(int(a.nbytes) for a in meta)
+    assert pb == codec.payload_bytes(m, d, jnp.float32), name
+    assert tb == codec.total_bytes(m, d, jnp.float32), name
+    spec = panel_mod.with_wire(panel_mod.make_spec({"w": x}), name)
+    assert spec.wire_payload_bytes == codec.payload_bytes(1, d, "float32")
+    assert spec.wire_total_bytes == codec.total_bytes(1, d, "float32")
+    assert spec.wire_bytes == spec.wire_total_bytes  # back-compat alias
+
+
+# -------------------------------------------------- encode/err contract
+
+
+@pytest.mark.parametrize("name", CODEC_NAMES)
+def test_encode_error_state_contract(name):
+    """EF codecs refuse a missing err and never grow the residual beyond
+    the carried signal; residual-free codecs pass err through untouched
+    and do not fold it into the payload."""
+    codec = wire_mod.get_codec(name)
+    x = _panel(4, 64, seed=7)
+    key = _key_for(codec)
+    if codec.error_feedback:
+        with pytest.raises(ValueError, match="err"):
+            codec.encode(x, key=key)
+        err = _err_for(codec, x, cold=True)
+        res0 = codec.residual(x, err)
+        xhat, back, new_err = codec.encode(x, key=key, err=err)
+        res1 = codec.residual(x, new_err)
+        assert xhat.shape == x.shape and res1 is not None
+        carried = float(jnp.max(jnp.abs(x + res0))) + 1e-4
+        assert float(jnp.max(jnp.abs(res1))) <= 1.5 * carried
+        assert bool(jnp.all(jnp.isfinite(back(xhat.astype(jnp.float32)))))
+    else:
+        e0 = jnp.full_like(x, 0.01)
+        xhat_e, _, e1 = codec.encode(x, key=key, err=e0)
+        np.testing.assert_array_equal(np.asarray(e0), np.asarray(e1))
+        assert codec.residual(x, e0) is e0  # identity residual mapping
+        xhat, _, none_err = codec.encode(x, key=key)
+        assert none_err is None
+        np.testing.assert_array_equal(np.asarray(xhat),
+                                      np.asarray(xhat_e))
+
+
+@pytest.mark.parametrize("name", CODEC_NAMES)
+def test_ef_residual_telescopes_on_constant_input(name):
+    """T encodes of a CONSTANT input: the effective residual never blows
+    up, and the late-window time average of the transmitted view
+    converges to the input at the O(max residual / T) feedback rate."""
+    codec = wire_mod.get_codec(name)
+    if not codec.error_feedback:
+        pytest.skip("contract applies to error-feedback codecs")
+    m, d, T = 3, 48, 48
+    x = _panel(m, d, seed=11)
+    err = _err_for(codec, x, cold=True)
+    keys = jax.random.split(jax.random.PRNGKey(2), T)
+    xhats, max_res = [], 0.0
+    for t in range(T):
+        key = keys[t] if codec.needs_key else None
+        xhat, _, err = codec.encode(x, key=key, err=err)
+        xhats.append(xhat.astype(jnp.float32))
+        max_res = max(max_res,
+                      float(jnp.max(jnp.abs(codec.residual(x, err)))))
+    assert max_res <= 1.5 * float(jnp.max(jnp.abs(x))) + 1e-4
+    late = jnp.mean(jnp.stack(xhats[T // 2:]), axis=0)
+    gap = float(jnp.max(jnp.abs(late - x)))
+    assert gap <= 6.0 * max_res / T + 1e-6, (gap, max_res)
+
+
+# ------------------------------------------------- stochastic rounding
+
+
+@pytest.mark.parametrize("name", CODEC_NAMES)
+def test_stochastic_unbiased_or_deterministic(name):
+    """Key-driven codecs: E_key[xhat] == x within 6 empirical standard
+    errors per element (no codec-specific scale enters the bound).
+    Key-free codecs: encode is deterministic and key-invariant."""
+    codec = wire_mod.get_codec(name)
+    m, d = 3, 40
+    x = _panel(m, d, seed=13)
+    err = _err_for(codec, x, cold=True)
+    if codec.needs_key:
+        N = 256
+        keys = jax.random.split(jax.random.PRNGKey(3), N)
+        xhats = jax.vmap(
+            lambda k: codec.encode(x, key=k, err=err)[0]
+            .astype(jnp.float32))(keys)
+        mean_err = jnp.abs(jnp.mean(xhats, axis=0) - x)
+        se = jnp.std(xhats, axis=0) / np.sqrt(N)
+        # 6 empirical standard errors, plus a per-row quantization-step
+        # slack for the small-p binomial corner: an element whose true
+        # flip probability is O(1/N) can show zero flips (se = 0) while
+        # carrying an O(step/N) bias — estimate the step from the
+        # observed row spread, no codec-specific scale involved
+        step = jnp.max(jnp.max(xhats, axis=0) - jnp.min(xhats, axis=0),
+                       axis=1, keepdims=True)
+        assert bool(jnp.all(mean_err <= 6.0 * se + 6.0 * step / N
+                            + 1e-7)), name
+    else:
+        a, _, _ = codec.encode(x, key=None, err=err)
+        b, _, _ = codec.encode(x, key=jax.random.PRNGKey(0), err=err)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ------------------------------------------------- kernel / jit parity
+
+
+@pytest.mark.parametrize("name", CODEC_NAMES)
+def test_pallas_path_matches_ref_path(name):
+    """encode(use_pallas=True) must be bit-identical to the XLA/ref
+    path given the same key and EF state (non-divisible width exercises
+    the kernels' padded tails)."""
+    codec = wire_mod.get_codec(name)
+    x = _panel(5, 333, seed=17)
+    key = _key_for(codec, seed=4)
+    err = _err_for(codec, x, cold=True)
+    a, _, ea = codec.encode(x, key=key, err=err, use_pallas=False)
+    b, _, eb = codec.encode(x, key=key, err=err, use_pallas=True)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    if codec.error_feedback:
+        np.testing.assert_array_equal(np.asarray(ea), np.asarray(eb))
+
+
+@pytest.mark.parametrize("name", CODEC_NAMES)
+def test_draws_bit_identical_sharded_vs_replicated(name):
+    """A jitted encode with the input sharded over rows must produce the
+    same bits as the jitted replicated encode — the scoped
+    ``threefry_partitionable`` contract: SPMD partitioning must not
+    change the stochastic-rounding draw. (Eager-vs-jit bit identity is
+    deliberately NOT asserted: XLA CPU lowers f32 division to a 1-ulp
+    reciprocal multiply under jit, and the engine always runs jitted —
+    consistency across jitted lowerings is the real contract.) With a
+    single local device the sharded program degenerates to the
+    replicated one; CI forces an 8-device host so the split is real."""
+    codec = wire_mod.get_codec(name)
+    m, d = 4, 96
+    x = _panel(m, d, seed=19)
+    key = _key_for(codec, seed=6)
+    err = _err_for(codec, x, cold=True)
+
+    def enc(xx, ee):
+        xhat, _, ne = codec.encode(xx, key=key, err=ee)
+        return xhat, ne
+
+    ja, je = jax.jit(enc)(x, err)
+    from jax.sharding import Mesh, NamedSharding
+    from jax.sharding import PartitionSpec as P
+    ndev = min(4, jax.device_count())
+    mesh = Mesh(np.asarray(jax.devices()[:ndev]), ("rows",))
+    sh = NamedSharding(mesh, P("rows", None))
+    xs = jax.device_put(x, sh)
+    es = jax.device_put(err, sh) if err is not None else None
+    sa, se_ = jax.jit(enc)(xs, es)
+    np.testing.assert_array_equal(np.asarray(ja), np.asarray(sa))
+    if codec.error_feedback:
+        np.testing.assert_array_equal(np.asarray(je), np.asarray(se_))
+
+
+# --------------------------------------------------- engine contracts
+
+
+@pytest.mark.parametrize("name", CODEC_NAMES)
+def test_idle_segment_bitexact(name):
+    """A schedule of W = I rounds communicates nothing, so EVERY codec
+    must leave the segment driver bit-identical to the no-policy run
+    (codec skipped, wire-key fold_in not perturbing the local-step rng)
+    and its EF state exactly at the init value."""
+    m, H, S, dim, classes = 4, 2, 3, 10, 3
+    init_params, loss_fn = _toy_problem(m, dim, classes)
+    opt = make_optimizer("adamw", 1e-2)
+    _, (bx, by) = _segment_inputs(S, H, m, dim, classes)
+    Ws = jnp.broadcast_to(jnp.eye(m, dtype=jnp.float32), (S, m, m))
+
+    def run(wire):
+        pstate, spec = dsgd.init_panel_state(
+            init_params, opt, m, jax.random.PRNGKey(0), wire=wire)
+        err0 = jax.tree.map(lambda v: v + 0.0,
+                            pstate.get("wire_err", {}))  # donated below
+        seg_fn = dsgd.make_panel_segment(loss_fn, opt, H, spec)
+        out = seg_fn(pstate, (bx, by), Ws, jax.random.PRNGKey(1))
+        return out, err0
+
+    (base, base_mets), _ = run(None)
+    (ps, mets), err0 = run(name)
+    for a, b in zip(jax.tree.leaves(base["panel"]),
+                    jax.tree.leaves(ps["panel"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(base_mets["loss"]),
+                                  np.asarray(mets["loss"]))
+    np.testing.assert_array_equal(np.asarray(base_mets["consensus"]),
+                                  np.asarray(mets["consensus"]))
+    if "wire_err" in ps:  # EF state untouched by idle rounds
+        for k, v in ps["wire_err"].items():
+            np.testing.assert_array_equal(np.asarray(v),
+                                          np.asarray(err0[k]))
+
+
+@pytest.mark.parametrize("name", CODEC_NAMES)
+def test_idle_rows_exact_in_dense_mix(name):
+    """Unmatched agents (identity rows of W) communicate nothing — every
+    codec must restore their params and EF state exactly; matched rows
+    may move."""
+    codec = wire_mod.get_codec(name)
+    m, d = 4, 64
+    x = _panel(m, d, seed=23)
+    W = jnp.asarray([[0.5, 0.5, 0, 0], [0.5, 0.5, 0, 0],
+                     [0, 0, 1.0, 0], [0, 0, 0, 1.0]], jnp.float32)
+    spec = panel_mod.with_wire(panel_mod.make_spec({"w": x}), name)
+    err = _err_for(codec, x, cold=True)
+    kw = dict(spec=spec, key=_key_for(codec, seed=8))
+    if err is not None:
+        out, new_err = panel_mod.mix_dense(
+            {"float32": x}, W, err={"float32": err}, **kw)
+        np.testing.assert_array_equal(
+            np.asarray(new_err["float32"][2:]), np.asarray(err[2:]))
+    else:
+        out = panel_mod.mix_dense({"float32": x}, W, **kw)
+    np.testing.assert_array_equal(np.asarray(out["float32"][2:]),
+                                  np.asarray(x[2:]))
+    assert bool(jnp.any(out["float32"][:2] != x[:2]))
+
+
+@pytest.mark.parametrize("name", CODEC_NAMES)
+def test_global_merge_collapses_consensus(name):
+    """One global merge through any codec leaves every agent on the same
+    row (lossy codecs merge the same decoded panel for everyone; delta
+    codecs run their full-bandwidth sync)."""
+    codec = wire_mod.get_codec(name)
+    m, d = 4, 52
+    x = _panel(m, d, seed=29)
+    spec = panel_mod.with_wire(panel_mod.make_spec({"w": x}), name)
+    err = _err_for(codec, x)
+    kw = dict(spec=spec, key=_key_for(codec, seed=9))
+    if err is not None:
+        merged, _ = panel_mod.global_merge(
+            {"float32": x}, err={"float32": err}, **kw)
+    else:
+        merged = panel_mod.global_merge({"float32": x}, **kw)
+    xi = float(panel_mod.consensus_distance(merged))
+    assert xi <= 1e-6, (name, xi)

@@ -379,6 +379,41 @@ def test_wire_bytes_codec_aware():
     assert panel_mod.with_wire(spec, "int8_ef").wire_bytes == i8
 
 
+def test_wire_bytes_payload_vs_total_formulas():
+    """Regression pinning the payload/total split: ``wire_payload_bytes``
+    counts the quantized values alone, ``wire_total_bytes`` adds
+    scale/index metadata (per-row int8 scale, per-128-column int4 group
+    scales, packed top-k indices), and ``wire_bytes`` stays the total
+    (the pre-split name under-distinguished the two). Odd width pins the
+    nibble/packing ceilings."""
+    d = 4097  # odd AND not a multiple of the int4 scale group
+    tree = {"w": jnp.zeros((2, d), jnp.float32)}
+    spec = panel_mod.make_spec(tree)
+
+    def bytes_of(name):
+        s = panel_mod.with_wire(spec, name)
+        return s.wire_payload_bytes, s.wire_total_bytes
+
+    assert bytes_of("f32") == (4 * d, 4 * d)
+    assert bytes_of("bf16") == (2 * d, 2 * d)
+    assert bytes_of("int8") == (d, d + 4)
+    assert bytes_of("int8_ef") == (d, d + 4)
+    groups = -(-d // 128)
+    assert bytes_of("int4") == ((d + 1) // 2,
+                                (d + 1) // 2 + 4 * groups)
+    assert bytes_of("int4_ef") == bytes_of("int4")
+    codec = wire_mod.get_codec("topk")
+    k = codec.k_of(d)
+    assert k == int(d * codec.density)
+    assert codec.idx_bytes(d) == 2                        # 13-bit indices
+    assert bytes_of("topk") == (4 * k, 4 * k + 2 * k)
+    # the headline ratios on the VALUES payload: int4 is 8x f32, topk is
+    # (1/density)x f32 before index overhead
+    assert 4 * d / bytes_of("int4")[0] == pytest.approx(8.0, rel=1e-3)
+    assert 4 * d / bytes_of("topk")[0] == pytest.approx(
+        1.0 / codec.density, rel=1e-2)
+
+
 def test_wire_policy_per_group_and_validation():
     m = 2
     tree = {"emb": jnp.zeros((m, 64), jnp.bfloat16),
@@ -437,3 +472,57 @@ def test_codec_pallas_path_matches_xla_path():
     a, _, _ = codec.encode(x, key=key, use_pallas=False)
     b, _, _ = codec.encode(x, key=key, use_pallas=True)
     np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("m,D,group,block_d",
+                         [(4, 64, 32, 64), (3, 333, 128, 256),
+                          (5, 1000, 128, 384)])
+@pytest.mark.parametrize("stochastic", [False, True])
+def test_int4_kernels_match_ref(m, D, group, block_d, stochastic):
+    """Pallas int4 quantize/pack/unpack/dequantize (interpret mode) are
+    bit-identical to the kernels/ref.py oracles, including non-divisible
+    D (padded tails, partial scale groups, odd nibble tails) and with
+    the same uniform draws; pack -> unpack is an exact inverse."""
+    x = _panel(m, D, seed=m * 100 + D)
+    scale = ref_mod.int4_group_scale_ref(x, group)
+    assert scale.shape == (m, -(-D // group))
+    u = (jax.random.uniform(jax.random.PRNGKey(1), x.shape, jnp.float32)
+         if stochastic else None)
+    q_k, s_k = wire_quant.quantize_int4_panel(x, scale, u, group=group,
+                                              block_d=block_d)
+    q_r = ref_mod.quantize_int4_ref(x, scale, u, group)
+    np.testing.assert_array_equal(np.asarray(q_k), np.asarray(q_r))
+    np.testing.assert_array_equal(np.asarray(s_k), np.asarray(scale))
+    p_k = wire_quant.pack_int4_panel(q_r, block_d=block_d)
+    p_r = ref_mod.pack_int4_ref(q_r)
+    assert p_r.shape == (m, (D + 1) // 2) and p_r.dtype == jnp.uint8
+    np.testing.assert_array_equal(np.asarray(p_k), np.asarray(p_r))
+    uq_k = wire_quant.unpack_int4_panel(p_r, D, block_d=block_d)
+    uq_r = ref_mod.unpack_int4_ref(p_r, D)
+    np.testing.assert_array_equal(np.asarray(uq_k), np.asarray(uq_r))
+    np.testing.assert_array_equal(np.asarray(uq_r), np.asarray(q_r))
+    d_k = wire_quant.dequantize_int4_panel(q_r, scale, group=group,
+                                           block_d=block_d)
+    np.testing.assert_array_equal(
+        np.asarray(d_k),
+        np.asarray(ref_mod.dequantize_int4_ref(q_r, scale, group)))
+
+
+@pytest.mark.parametrize("m,D,block_d", [(4, 64, 32), (8, 333, 128),
+                                         (3, 1000, 512)])
+def test_sparsify_topk_kernel_matches_ref(m, D, block_d):
+    """Pallas top-k threshold sparsifier (interpret mode) is
+    bit-identical to sparsify_topk_ref, keeps exactly k survivors per
+    row for tie-free inputs, and the threshold is the k-th largest
+    magnitude (computed outside the kernel like the int8 scales)."""
+    x = _panel(m, D, seed=m * 7 + D)
+    k = max(1, D // 8)
+    thresh = ref_mod.topk_threshold_ref(x, k)
+    s_k = wire_quant.sparsify_topk_panel(x, thresh, block_d=block_d)
+    s_r = ref_mod.sparsify_topk_ref(x, thresh)
+    np.testing.assert_array_equal(np.asarray(s_k), np.asarray(s_r))
+    assert int(jnp.sum(s_r != 0.0)) == m * k
+    np.testing.assert_array_equal(
+        np.asarray(wire_quant.sparsify_topk_panel(x, k=k,
+                                                  block_d=block_d)),
+        np.asarray(s_r))
