@@ -361,6 +361,57 @@ def bench_wire(codecs, m=16, d_model=256, layers=8, vocab=512, rounds=8,
             "rounds": rounds, "codecs": out}
 
 
+def bench_checkpoint(m=16, d_model=256, layers=8, vocab=512, reps=3):
+    """Checkpoint subsystem on the default-size panel train state
+    (int8_ef residuals + fisher stats panels included): blob size,
+    blocking save / restore wall time, and the ASYNC handoff time — how
+    long Checkpointer.save(block=False) holds the caller (the host
+    snapshot) before the training loop may continue into the next
+    donated segment. Merged into BENCH_panel.json["checkpoint"]."""
+    import shutil
+    import tempfile
+
+    from repro.checkpoint import Checkpointer, restore
+    from repro.configs import get_config
+    from repro.core import dsgd
+    from repro.models import build_model
+    from repro.optim import make_optimizer
+
+    cfg = get_config("olmo-1b").reduced(d_model=d_model, layers=layers,
+                                        vocab=vocab)
+    model = build_model(cfg)
+    opt = make_optimizer("adamw", 1e-2)
+    state, spec = dsgd.init_panel_state(model.init_params, opt, m,
+                                        jax.random.PRNGKey(0),
+                                        wire="int8_ef", merger="fisher")
+    jax.block_until_ready(jax.tree.leaves(state))
+    tmp = tempfile.mkdtemp(prefix="ckpt_bench_")
+    try:
+        ck = Checkpointer(tmp, keep=2)
+        save_s, restore_s, handoff_s = [], [], []
+        for step in range(reps):
+            t0 = time.perf_counter()
+            ck.save(step, state, block=True)
+            save_s.append(time.perf_counter() - t0)
+        path = os.path.join(tmp, f"step_{reps - 1:08d}.ckpt")
+        nbytes = os.path.getsize(path)
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            restore(path, state)
+            restore_s.append(time.perf_counter() - t0)
+        for step in range(reps):
+            t0 = time.perf_counter()
+            ck.save(100 + step, state, block=False)
+            handoff_s.append(time.perf_counter() - t0)
+            ck.wait()
+        return {"m": m, "D": spec.width, "bytes": nbytes,
+                "save_s": round(min(save_s), 4),
+                "restore_s": round(min(restore_s), 4),
+                "async_handoff_s": round(min(handoff_s), 4)}
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
 def _load_existing():
     if os.path.exists("BENCH_panel.json"):
         with open("BENCH_panel.json") as f:
@@ -379,6 +430,10 @@ def main():
                          "(payload + total) + runtime + final-merge "
                          "parity. A codec name, a comma-separated list "
                          "('int8,int4,topk'), or 'all'")
+    ap.add_argument("--checkpoint", action="store_true",
+                    help="bench the checkpoint subsystem on the default-"
+                         "size train state: blob bytes, save/restore wall "
+                         "time, async-save handoff time")
     args = ap.parse_args()
     if args.wire and args.wire != "all":
         unknown = [c for c in args.wire.split(",") if c not in WIRE_CODECS]
@@ -423,7 +478,17 @@ def main():
         print(f"sharded: replicated={r['us_per_round_replicated']:.0f}us "
               f"fsdp-sharded={r['us_per_round_sharded']:.0f}us "
               f"coll={r['coll_bytes_per_round']}B/round", flush=True)
-    if not args.wire and not args.sharded:  # default: the sizes sweep
+    if args.checkpoint:
+        out["checkpoint"] = bench_checkpoint(
+            **{k: v for k, v in SIZES["default"].items() if k != "rounds"})
+        r = out["checkpoint"]
+        print(f"checkpoint: {r['bytes'] / 1e6:.1f}MB "
+              f"save={r['save_s'] * 1e3:.0f}ms "
+              f"restore={r['restore_s'] * 1e3:.0f}ms "
+              f"async_handoff={r['async_handoff_s'] * 1e3:.0f}ms",
+              flush=True)
+    if not args.wire and not args.sharded and not args.checkpoint:
+        # default: the sizes sweep
         out["backend"] = jax.default_backend()  # labels the "sizes" runs
         out.setdefault("sizes", {})
         for name, kw in SIZES.items():

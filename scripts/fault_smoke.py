@@ -1,0 +1,86 @@
+#!/usr/bin/env python
+"""Fault-injection smoke for the elastic checkpoint/resume path.
+
+Drives three subprocess runs of ``repro.launch.train`` with identical
+hyperparameters:
+
+1. **baseline** — the uninterrupted run,
+2. **interrupted** — ``--checkpoint-every 1 --die-after-segments 1``:
+   the launcher SIGKILLs itself between segments, after flushing the
+   async checkpoint (expected exit: -SIGKILL),
+3. **resumed** — ``--resume`` on the interrupted run's checkpoint
+   directory, continuing to completion.
+
+The resumed run's full history JSON (per-round train loss, consensus,
+grad norm, merged/local evals, comm cost) must equal the baseline's
+BIT-EXACTLY — resume restores the panel state, both host rng streams
+and the schedule rng, so the trajectories are the same floats.
+
+Prints a one-line JSON verdict on the last stdout line; exit 0 iff ok.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import signal
+import subprocess
+import sys
+
+CFG = ["--rounds", "6", "--segment", "2", "--agents", "4",
+       "--local-steps", "2", "--batch", "4", "--seq", "32",
+       "--wire", "int8_ef", "--merge", "fisher",
+       "--schedule", "final_merge", "--seed", "0"]
+TAG = "olmo-1b_final_merge_a0.1_mfisher.json"
+
+
+def run(out, extra, expect_rc=0):
+    cmd = [sys.executable, "-m", "repro.launch.train",
+           *CFG, "--out", out, *extra]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = env.get("PYTHONPATH", "src")
+    proc = subprocess.run(cmd, env=env, capture_output=True, text=True)
+    if proc.returncode != expect_rc:
+        sys.stderr.write(proc.stdout + proc.stderr)
+        raise SystemExit(
+            f"{' '.join(extra) or 'baseline'}: exit {proc.returncode}, "
+            f"expected {expect_rc}")
+    return proc
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workdir", default="results/fault_smoke")
+    args = ap.parse_args()
+    base = os.path.join(args.workdir, "baseline")
+    intr = os.path.join(args.workdir, "interrupted")
+    shutil.rmtree(args.workdir, ignore_errors=True)
+
+    run(base, [])
+    # the interrupted run dies by SIGKILL between segments — a real
+    # crash, not a clean shutdown; only the flushed checkpoint survives
+    run(intr, ["--checkpoint-every", "1", "--die-after-segments", "1"],
+        expect_rc=-signal.SIGKILL)
+    manifest = os.path.join(intr, "ckpt_" + TAG[:-5], "MANIFEST.json")
+    if not os.path.exists(manifest):
+        raise SystemExit(f"no checkpoint manifest at {manifest}")
+    resumed = run(intr, ["--checkpoint-every", "1", "--resume"])
+    if "resumed from checkpoint" not in resumed.stdout:
+        raise SystemExit("resumed run did not restore a checkpoint")
+
+    with open(os.path.join(base, TAG)) as f:
+        hb = json.load(f)["history"]
+    with open(os.path.join(intr, TAG)) as f:
+        hr = json.load(f)["history"]
+    ok = hb == hr
+    diff = [r for r, (a, b) in enumerate(zip(hb, hr)) if a != b]
+    print(json.dumps({"ok": ok, "rounds": len(hb),
+                      "final_merged_eval": hb[-1]["merged_eval"],
+                      "diff_rounds": diff,
+                      "manifest": manifest}))
+    raise SystemExit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

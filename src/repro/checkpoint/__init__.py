@@ -1,1 +1,6 @@
-from repro.checkpoint.io import restore, save  # noqa: F401
+from repro.checkpoint.io import (  # noqa: F401
+    CheckpointCorruptError,
+    Checkpointer,
+    restore,
+    save,
+)

@@ -1,16 +1,49 @@
-"""Minimal checkpointing: pytrees -> msgpack (+ raw array payloads).
+"""Versioned, manifest-based checkpointing for panel train states.
 
-No external deps beyond msgpack (installed). Arrays are stored as
-(dtype, shape, bytes) triples keyed by their flattened key path; restore
-rebuilds into the structure of a reference pytree.
+Blob format (``FORMAT_VERSION`` 1, msgpack): a map with
+
+* ``version`` — this format version,
+* ``meta``    — a JSON-encoded bytes blob of host-side metadata (JSON,
+  not msgpack, because a numpy PCG64 bit-generator state carries
+  128-bit integers that msgpack cannot represent),
+* ``payload`` — the msgpack-encoded flat array table
+  ``{key-path: {dtype: name, shape, data}}`` (dtype by NAME so bf16 and
+  the other ml_dtypes round-trip),
+* ``crc``     — CRC-32 over ``meta`` + ``payload``; a torn or corrupted
+  file fails the checksum and raises :class:`CheckpointCorruptError`.
+
+Writes are atomic (tmp file + fsync + ``os.replace``), so a crash
+mid-save never leaves a torn checkpoint at the target path. The legacy
+pre-versioned format (a bare flat array table) still restores.
+
+:class:`Checkpointer` manages a DIRECTORY of ``step_*.ckpt`` files plus
+a ``MANIFEST.json`` (fingerprint of the run configuration + the ordered
+checkpoint list): retention of the last ``keep`` checkpoints,
+background-thread async commits off a caller-thread host snapshot
+(donation-safe: the device buffers are copied to host before ``save``
+returns), and :meth:`restore_latest` with automatic fallback to the
+previous good checkpoint when the newest one is corrupt.
 """
 from __future__ import annotations
 
+import json
 import os
+import re
+import threading
+import warnings
+import zlib
 
 import jax
 import msgpack
 import numpy as np
+
+FORMAT_VERSION = 1
+MANIFEST_NAME = "MANIFEST.json"
+_STEP_FILE = re.compile(r"step_(\d+)\.ckpt$")
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint file failed its checksum or could not be decoded."""
 
 
 def _key_str(path) -> str:
@@ -25,28 +58,261 @@ def _key_str(path) -> str:
     return "/".join(parts)
 
 
-def save(path: str, tree) -> None:
-    flat = {}
-    for kp, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
-        arr = np.asarray(leaf)
-        flat[_key_str(kp)] = {
-            "dtype": arr.dtype.str, "shape": list(arr.shape),
-            "data": arr.tobytes()}
-    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
-    with open(path, "wb") as f:
-        f.write(msgpack.packb(flat))
+def _resolve_dtype(name: str) -> np.dtype:
+    """dtype from its stored name; ml_dtypes names (bfloat16, float8_*)
+    are not numpy-native and resolve through the ml_dtypes registry."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, name))
 
 
-def restore(path: str, like):
-    with open(path, "rb") as f:
-        flat = msgpack.unpackb(f.read())
+def _flatten_to_host(tree) -> dict:
+    """{key-path: host ndarray}. np.asarray COPIES device buffers to
+    host, so the snapshot survives later donation of the live state."""
+    return {_key_str(kp): np.asarray(leaf)
+            for kp, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]}
+
+
+def _pack_blob(flat: dict, meta) -> tuple:
+    payload = msgpack.packb(
+        {k: {"dtype": np.dtype(a.dtype).name, "shape": list(a.shape),
+             "data": a.tobytes()} for k, a in flat.items()})
+    meta_bytes = json.dumps(meta if meta is not None else {}).encode()
+    crc = zlib.crc32(meta_bytes + payload) & 0xFFFFFFFF
+    blob = msgpack.packb({"version": FORMAT_VERSION, "meta": meta_bytes,
+                          "crc": crc, "payload": payload})
+    return blob, crc
+
+
+def _unpack_blob(raw: bytes) -> tuple:
+    """(flat array table, meta dict); CheckpointCorruptError on any
+    decode/checksum failure. A map without a 'version' key is the legacy
+    flat format (no meta, no checksum)."""
+    try:
+        obj = msgpack.unpackb(raw)
+    except Exception as exc:
+        raise CheckpointCorruptError(
+            f"undecodable checkpoint: {exc}") from None
+    if not isinstance(obj, dict):
+        raise CheckpointCorruptError("checkpoint is not a msgpack map")
+    if "version" not in obj:
+        return obj, {}
+    if obj["version"] != FORMAT_VERSION:
+        raise CheckpointCorruptError(
+            f"unsupported checkpoint format version {obj['version']!r} "
+            f"(this build reads {FORMAT_VERSION})")
+    try:
+        meta_bytes, payload = obj["meta"], obj["payload"]
+    except KeyError as exc:
+        raise CheckpointCorruptError(
+            f"checkpoint missing section {exc}") from None
+    if zlib.crc32(meta_bytes + payload) & 0xFFFFFFFF != obj.get("crc"):
+        raise CheckpointCorruptError(
+            "checksum mismatch (torn or corrupted write)")
+    try:
+        return msgpack.unpackb(payload), json.loads(meta_bytes.decode())
+    except Exception as exc:
+        raise CheckpointCorruptError(
+            f"undecodable checkpoint sections: {exc}") from None
+
+
+def _rebuild(flat: dict, like):
+    """Writable arrays in the structure of ``like``; errors name the
+    offending key on missing/extra keys and shape/dtype drift."""
     paths, treedef = jax.tree_util.tree_flatten_with_path(like)
-    leaves = []
+    leaves, used = [], set()
     for kp, ref in paths:
         key = _key_str(kp)
         if key not in flat:
-            raise KeyError(f"checkpoint missing {key}")
+            raise KeyError(f"checkpoint missing key '{key}'")
+        used.add(key)
         rec = flat[key]
-        arr = np.frombuffer(rec["data"], dtype=np.dtype(rec["dtype"]))
-        leaves.append(arr.reshape(rec["shape"]))
+        dtype = _resolve_dtype(rec["dtype"])
+        shape = tuple(rec["shape"])
+        ref_shape = tuple(np.shape(ref))
+        ref_dtype = np.dtype(getattr(ref, "dtype", np.asarray(ref).dtype))
+        if shape != ref_shape:
+            raise ValueError(
+                f"checkpoint key '{key}' has shape {shape}, the "
+                f"reference tree expects {ref_shape}")
+        if dtype != ref_dtype:
+            raise ValueError(
+                f"checkpoint key '{key}' has dtype {dtype.name}, the "
+                f"reference tree expects {ref_dtype.name}")
+        # .copy(): frombuffer views are read-only and would break
+        # donation/in-place update downstream
+        leaves.append(np.frombuffer(rec["data"], dtype=dtype)
+                      .reshape(shape).copy())
+    extra = sorted(set(flat) - used)
+    if extra:
+        raise ValueError(
+            f"checkpoint carries keys the reference tree does not: "
+            f"{extra} (stale or mismatched checkpoint?)")
     return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def _atomic_write(path: str, blob: bytes) -> None:
+    path = os.path.abspath(path)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "wb") as f:
+        f.write(blob)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
+def save(path: str, tree, meta=None) -> None:
+    """Atomic single-file save (versioned format; ``meta`` is any
+    JSON-serializable host-side dict riding next to the arrays)."""
+    blob, _ = _pack_blob(_flatten_to_host(tree), meta)
+    _atomic_write(path, blob)
+
+
+def restore(path: str, like, with_meta: bool = False):
+    """Rebuild ``like``'s structure from a checkpoint file (writable
+    arrays). Raises CheckpointCorruptError on torn/corrupt files,
+    KeyError/ValueError naming the offending key on structure drift."""
+    with open(path, "rb") as f:
+        raw = f.read()
+    flat, meta = _unpack_blob(raw)
+    tree = _rebuild(flat, like)
+    return (tree, meta) if with_meta else tree
+
+
+class Checkpointer:
+    """Retention + manifest + async commit over a checkpoint directory.
+
+    ``fingerprint`` (a flat JSON-serializable dict describing the run
+    configuration) guards resumes: reopening a non-empty directory with
+    a different fingerprint raises, naming the differing keys.
+
+    ``save(step, tree, meta, block=False)`` snapshots the device state
+    to host ON THE CALLER THREAD (so the caller may immediately donate
+    the live buffers) and packs/writes on a background thread; the next
+    ``save``/``wait``/``restore_latest`` joins it and re-raises any
+    stored error.
+    """
+
+    def __init__(self, directory: str, keep: int = 3, fingerprint=None):
+        self.directory = os.path.abspath(directory)
+        os.makedirs(self.directory, exist_ok=True)
+        self.keep = int(keep)
+        if self.keep < 1:
+            raise ValueError(f"keep must be >= 1, got {keep}")
+        self.fingerprint = fingerprint
+        self._thread = None
+        self._error = None
+        self._manifest = self._load_manifest()
+        if fingerprint is not None and self._manifest["checkpoints"]:
+            old = self._manifest.get("fingerprint") or {}
+            diff = sorted(k for k in set(old) | set(fingerprint)
+                          if old.get(k) != fingerprint.get(k))
+            if diff:
+                raise ValueError(
+                    f"checkpoint directory {self.directory} belongs to a "
+                    f"different run configuration; differing keys: {diff}")
+
+    # ------------------------------------------------------- manifest
+    def _manifest_path(self) -> str:
+        return os.path.join(self.directory, MANIFEST_NAME)
+
+    def _load_manifest(self) -> dict:
+        try:
+            with open(self._manifest_path(), "r") as f:
+                man = json.load(f)
+            if isinstance(man, dict) and isinstance(
+                    man.get("checkpoints"), list):
+                return man
+        except (OSError, ValueError):
+            pass
+        return {"version": FORMAT_VERSION, "fingerprint": None,
+                "checkpoints": []}
+
+    # ----------------------------------------------------------- save
+    def save(self, step: int, tree, meta=None, block: bool = True) -> None:
+        self.wait()
+        flat = _flatten_to_host(tree)
+        if block:
+            self._commit(int(step), flat, meta)
+            return
+        self._thread = threading.Thread(
+            target=self._commit_guarded, args=(int(step), flat, meta),
+            daemon=True)
+        self._thread.start()
+
+    def _commit_guarded(self, step, flat, meta):
+        try:
+            self._commit(step, flat, meta)
+        except BaseException as exc:  # re-raised from wait()
+            self._error = exc
+
+    def _commit(self, step, flat, meta):
+        blob, crc = _pack_blob(flat, meta)
+        fname = f"step_{step:08d}.ckpt"
+        _atomic_write(os.path.join(self.directory, fname), blob)
+        ckpts = [c for c in self._manifest["checkpoints"]
+                 if c["step"] != step]
+        ckpts.append({"step": step, "file": fname, "bytes": len(blob),
+                      "crc": crc})
+        ckpts.sort(key=lambda c: c["step"])
+        while len(ckpts) > self.keep:
+            old = ckpts.pop(0)
+            try:
+                os.remove(os.path.join(self.directory, old["file"]))
+            except OSError:
+                pass
+        self._manifest["checkpoints"] = ckpts
+        if self.fingerprint is not None:
+            self._manifest["fingerprint"] = self.fingerprint
+        _atomic_write(self._manifest_path(),
+                      json.dumps(self._manifest, indent=1).encode())
+
+    def wait(self) -> None:
+        """Join a pending async commit; re-raise its error, if any."""
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            exc, self._error = self._error, None
+            raise exc
+
+    # -------------------------------------------------------- restore
+    def latest_step(self):
+        cks = self._manifest["checkpoints"]
+        return cks[-1]["step"] if cks else None
+
+    def restore_latest(self, like):
+        """(step, tree, meta) from the newest GOOD checkpoint, or None.
+
+        Scans the manifest plus any on-disk ``step_*.ckpt`` orphans
+        (e.g. a checkpoint whose manifest update was lost), newest
+        first; a corrupt/torn file warns (RuntimeWarning) and falls back
+        to the previous one."""
+        self.wait()
+        cands = {c["file"]: c["step"]
+                 for c in self._manifest["checkpoints"]}
+        try:
+            names = os.listdir(self.directory)
+        except OSError:
+            names = []
+        for fn in names:
+            mobj = _STEP_FILE.fullmatch(fn)
+            if mobj and fn not in cands:
+                cands[fn] = int(mobj.group(1))
+        for fn, step in sorted(cands.items(), key=lambda kv: -kv[1]):
+            path = os.path.join(self.directory, fn)
+            try:
+                tree, meta = restore(path, like, with_meta=True)
+            except FileNotFoundError:
+                continue
+            except CheckpointCorruptError as exc:
+                warnings.warn(
+                    f"checkpoint {fn} is corrupt ({exc}); falling back "
+                    "to the previous good checkpoint", RuntimeWarning,
+                    stacklevel=2)
+                continue
+            return step, tree, meta
+        return None

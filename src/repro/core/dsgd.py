@@ -362,13 +362,16 @@ def make_panel_segment(loss_fn: Callable, optimizer: Optimizer,
                        param_shardings=None, in_shardings=None):
     """Donated, scanned panel driver: one dispatch per SCHEDULE SEGMENT.
 
-    segment(state, batches, Ws, rng, active=None, global_rounds=None)
+    segment(state, batches, Ws, rng, active=None, global_rounds=None,
+            live=None)
     -> (state, metrics) with
       batches leaves (S, H, m, b, ...)  — H DISTINCT batches per round,
       Ws (S, m, m)                      — precomputed mixing matrices,
       active (S,) bool or None          — padding mask (see below),
       global_rounds (S,) bool or None   — which rounds are GLOBAL (see
                                           Merge operators below),
+      live (S, m) int or None           — per-round per-agent liveness
+                                          (see Liveness below),
       metrics dict of (S,) arrays      — one device_get per segment.
 
     ``jax.lax.scan`` runs the S rounds (each an inner scan over the H
@@ -403,6 +406,29 @@ def make_panel_segment(loss_fn: Callable, optimizer: Optimizer,
     one-off smaller S: rounds with ``active[s] == False`` are full no-ops
     (state passes through untouched, metrics report 0) and their
     Ws/batches entries are ignored.
+
+    **Liveness (elastic runs).** ``live`` extends the per-round ``active``
+    mask to a per-round PER-AGENT (S, m) trit mask (core.faults:
+    DEAD=0 / LIVE=1 / RESYNC=2 — the launcher stacks
+    ``Schedule.last_live``). LIVE agents run the round normally. A DEAD
+    agent's parameter, moment, EF-residual and merge-statistics rows
+    pass through the round bit-exactly: it takes no local steps (its
+    rows of the vmapped grad/optimizer update are discarded — the rng
+    stream is consumed identically, so survivors' draws match the
+    fault-free run), and the caller must hand in the matching DEGRADED W
+    (Schedule does: topology.degrade_to_live / fully_connected_live), so
+    its row is an identity row and the per-row idle rule keeps every
+    codec off it. A RESYNC agent (its rejoin round) takes no local steps
+    either; after the round's mix it receives a full-precision pull of
+    the live agents' post-mix mean, its optimizer-moment rows are
+    reset to zero and its EF-residual / merge-statistics rows are
+    re-initialized from the synced parameters (its own state is stale by
+    construction) — survivors are never perturbed. Metrics average over
+    the live agents; ``consensus`` is the live-only Xi. With a
+    non-uniform merge operator under faults, pass ``global_rounds``
+    explicitly — a degraded global W no longer fingerprints as the 1/m
+    matrix. ``live=None`` keeps the engine byte-identical to the
+    pre-liveness path.
 
     **Merge operators.** The spec's merge operator
     (panel_mod.with_merger / init_panel_state(merger=...), repro.merging)
@@ -450,7 +476,8 @@ def make_panel_segment(loss_fn: Callable, optimizer: Optimizer,
         (l, aux), g = jax.value_and_grad(loss_fn, has_aux=True)(p, b, r)
         return g, l
 
-    def segment(state, batches, Ws, rng, active=None, global_rounds=None):
+    def segment(state, batches, Ws, rng, active=None, global_rounds=None,
+                live=None):
         m = next(iter(state["panel"].values())).shape[0]
         S = Ws.shape[0]
         if needs_ef and "wire_err" not in state:
@@ -464,28 +491,157 @@ def make_panel_segment(loss_fn: Callable, optimizer: Optimizer,
                 "statistics panels but the state has no 'merge_stat'; "
                 "build the state with init_panel_state(..., merger=...)")
 
-        def local_body(carry, xs):
-            pan, opt, mstat = carry
-            batch, r = xs
-            rngs = jax.random.split(r, m)
-            params = panel_mod.from_panel(pan, spec,
-                                          leaf_shardings=param_shardings)
-            grads, losses = jax.vmap(one)(params, batch, rngs)
-            gpan = panel_mod.to_panel(grads, spec)
-            if not plain_merge and merger.local_stat:
-                mstat = merger.update_local(mstat, gpan)
-            new_pan, new_opt = jax.vmap(optimizer.update)(gpan, opt, pan)
-            gn = panel_mod.panel_norm(gpan, axis_mean=True)
-            return (new_pan, new_opt, mstat), (jnp.mean(losses), gn)
+        def row_mask(mask, a):
+            """(m,) bool mask broadcast against a leading-(m,) leaf."""
+            return mask.reshape((m,) + (1,) * (a.ndim - 1))
 
-        def run_round(carry, W, batch_r, r, glob):
+        def make_local_body(alive):
+            # alive=None compiles the exact pre-liveness body; a (m,)
+            # bool mask keeps non-live rows' params/moments/stats frozen
+            # while consuming the SAME rng stream (survivor draws match
+            # the fault-free twin)
+            if alive is not None:
+                lf = alive.astype(jnp.float32)
+                n_live = jnp.maximum(jnp.sum(lf), 1.0)
+
+                def freeze(new, old):
+                    return jax.tree.map(
+                        lambda a, b: jnp.where(row_mask(alive, a), a, b),
+                        new, old)
+
+            def local_body(carry, xs):
+                pan, opt, mstat = carry
+                batch, r = xs
+                rngs = jax.random.split(r, m)
+                params = panel_mod.from_panel(
+                    pan, spec, leaf_shardings=param_shardings)
+                grads, losses = jax.vmap(one)(params, batch, rngs)
+                gpan = panel_mod.to_panel(grads, spec)
+                if not plain_merge and merger.local_stat:
+                    upd = merger.update_local(mstat, gpan)
+                    mstat = upd if alive is None else freeze(upd, mstat)
+                new_pan, new_opt = jax.vmap(optimizer.update)(
+                    gpan, opt, pan)
+                if alive is None:
+                    loss = jnp.mean(losses)
+                    gn = panel_mod.panel_norm(gpan, axis_mean=True)
+                else:
+                    new_pan = freeze(new_pan, pan)
+                    new_opt = freeze(new_opt, opt)
+                    loss = jnp.sum(lf * losses) / n_live
+                    gn = panel_mod.panel_norm(gpan, axis_mean=True,
+                                              rows=lf / n_live)
+                return (new_pan, new_opt, mstat), (loss, gn)
+
+            return local_body
+
+        def _live_comm(pan, opt, werr, mstat, W, wkey, lv, alive, glob,
+                       losses, gns):
+            # elastic round: mix over the (already degraded) W, then
+            # apply the liveness mask — DEAD rows pass through, RESYNC
+            # rows pull the live agents' post-mix mean and restart their
+            # carried state from it
+            sync = lv == 2
+            not_live = ~alive
+            kw = dict(wire_dtype=wire_dtype, use_pallas=use_pallas,
+                      interpret=interpret, spec=spec, key=wkey)
+            idle = jnp.all(W == jnp.eye(m, dtype=W.dtype))
+            is_full = (None if plain_merge else
+                       (glob if glob is not None else
+                        jnp.all(W == jnp.full((m, m), 1.0 / m, W.dtype))))
+
+            def comm(args):
+                # monitor's folded-mean matmul (an extra 1^T/m row on W)
+                # mirrors the live=None path bit-for-bit: an all-live
+                # mask must not perturb the numerics. The folded mean
+                # itself is unused — the live-only Xi is computed below
+                p, e = args
+                if monitor:
+                    mixed, _, ne = panel_mod.mix_dense_mean(p, W, err=e,
+                                                            **kw)
+                    return mixed, ne
+                if needs_ef:
+                    return panel_mod.mix_dense(p, W, err=e, **kw)
+                return panel_mod.mix_dense(p, W, **kw), e
+
+            def gossip_fn(args):
+                return jax.lax.cond(idle, lambda a: a, comm, args)
+
+            def merge_fn(args):
+                p, e = args
+                mixed, _, ne = merging_mod.merge_panel(
+                    p, merger, stats=mstat, spec=spec,
+                    wire_dtype=wire_dtype, key=wkey, err=e,
+                    use_pallas=use_pallas, interpret=interpret,
+                    live=alive)
+                return mixed, ne
+
+            werr_in = werr
+            if plain_merge:
+                mixed, werr_m = jax.lax.cond(idle, lambda a: a, comm,
+                                             (pan, werr))
+            else:
+                mixed, werr_m = jax.lax.cond(is_full, merge_fn, gossip_fn,
+                                             (pan, werr))
+
+            lf = alive.astype(jnp.float32)
+            lw = lf / jnp.maximum(jnp.sum(lf), 1.0)
+            out_pan = {}
+            for k, x in mixed.items():
+                # dead AND resync agents did not participate in the mix:
+                # their rows are identity rows of the degraded W
+                # (defense in depth — the per-row idle rule already
+                # restores them under a lossy codec)
+                y = jnp.where(row_mask(not_live, x), pan[k], x)
+                mu = jnp.tensordot(lw, y.astype(jnp.float32), axes=1)
+                y = jnp.where(row_mask(sync, y), mu[None].astype(y.dtype),
+                              y)
+                out_pan[k] = panel_mod._constrain_group(y, spec, k)
+            # resync rows restart their carried state from the synced
+            # params: zero moments, codec-fresh residual, fresh stats
+            opt = jax.tree.map(
+                lambda a: jnp.where(row_mask(sync, a), jnp.zeros_like(a),
+                                    a), opt)
+            if werr_m is not None:
+                new_werr = {}
+                for k, e in werr_m.items():
+                    e = jnp.where(row_mask(not_live, e), werr_in[k], e)
+                    fresh = wire_mod.get_codec(spec.wire_of(k)).init_err(
+                        out_pan[k]).astype(e.dtype)
+                    new_werr[k] = panel_mod._constrain_group(
+                        jnp.where(row_mask(sync, e), fresh, e), spec, k)
+                werr_m = new_werr
+            if mstat is not None:
+                fresh = merger.init_stats(out_pan)
+                mstat = {
+                    name: {k: panel_mod._constrain_group(
+                        jnp.where(row_mask(sync, v), fresh[name][k], v),
+                        spec, k) for k, v in grp.items()}
+                    for name, grp in mstat.items()}
+            mets = {"loss": jnp.mean(losses), "grad_norm": gns[-1]}
+            if monitor:
+                mets["consensus"] = panel_mod.consensus_distance(
+                    out_pan, use_pallas=use_pallas, interpret=interpret,
+                    spec=spec, live=alive)
+            return (out_pan, opt, werr_m, mstat), mets
+
+        def run_round(carry, W, batch_r, r, glob, lv):
             pan, opt, werr, mstat = carry
+            alive = None if lv is None else lv == 1
             rs = jax.random.split(r, local_steps)
             (pan, opt, mstat), (losses, gns) = jax.lax.scan(
-                local_body, (pan, opt, mstat), (batch_r, rs))
+                make_local_body(alive), (pan, opt, mstat), (batch_r, rs))
             if not plain_merge and merger.round_stat:
-                mstat = merger.update_round(mstat, pan)
+                upd = merger.update_round(mstat, pan)
+                if alive is not None:
+                    upd = jax.tree.map(
+                        lambda a, b: jnp.where(row_mask(alive, a), a, b),
+                        upd, mstat)
+                mstat = upd
             wkey = _wire_key(r, needs_key)
+            if lv is not None:
+                return _live_comm(pan, opt, werr, mstat, W, wkey, lv,
+                                  alive, glob, losses, gns)
             # W == I rounds communicate nothing: skip the matmul AND the
             # codec (no payload travels, so nothing may be quantized and
             # the error-feedback residual must pass through untouched)
@@ -563,27 +719,31 @@ def make_panel_segment(loss_fn: Callable, optimizer: Optimizer,
 
         def round_body(carry, xs):
             W, batch_r, r = xs[:3]
-            rest = xs[3:]
-            glob = rest[0] if global_rounds is not None else None
-            act = rest[-1] if active is not None else None
+            rest = list(xs[3:])
+            glob = rest.pop(0) if global_rounds is not None else None
+            lv = rest.pop(0) if live is not None else None
+            act = rest.pop(0) if active is not None else None
             if act is None:
-                return run_round(carry, W, batch_r, r, glob)
+                return run_round(carry, W, batch_r, r, glob, lv)
 
             def inactive(c):
                 # zeros matching run_round's metric schema exactly
                 mets_sds = jax.eval_shape(
-                    lambda cc: run_round(cc, W, batch_r, r, glob)[1], c)
+                    lambda cc: run_round(cc, W, batch_r, r, glob, lv)[1],
+                    c)
                 return c, jax.tree.map(
                     lambda s: jnp.zeros(s.shape, s.dtype), mets_sds)
 
             return jax.lax.cond(
-                act, lambda c: run_round(c, W, batch_r, r, glob),
+                act, lambda c: run_round(c, W, batch_r, r, glob, lv),
                 inactive, carry)
 
         rngs = jax.random.split(rng, S)
         xs = (Ws, batches, rngs)
         if global_rounds is not None:
             xs = xs + (global_rounds,)
+        if live is not None:
+            xs = xs + (live,)
         if active is not None:
             xs = xs + (active,)
         werr0 = state.get("wire_err") if needs_ef else None

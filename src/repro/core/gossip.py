@@ -182,21 +182,45 @@ def mix_pairwise_tree(params, partner, weight=0.5, wire_dtype=None,
     return jax.tree_util.tree_unflatten(treedef, outs)
 
 
-def global_merge_tree(params, wire_dtype=None, wire=None, key=None):
-    """Per-leaf global merging: one mean-reduce per pytree leaf."""
+def global_merge_tree(params, wire_dtype=None, wire=None, key=None,
+                      live=None):
+    """Per-leaf global merging: one mean-reduce per pytree leaf.
+
+    ``live`` ((m,) bool) restricts the merge to the live agents: the
+    mean is over live rows only and ONLY live rows receive it — dead
+    rows pass through bit-exactly (the tree-path oracle of the engine's
+    masked global rounds)."""
     codec = _leaf_codec(wire_dtype, wire)
+    if live is None:
+        def leaf(xw):
+            mean = jnp.mean(xw.astype(jnp.float32), axis=0, keepdims=True)
+            return jnp.broadcast_to(mean, xw.shape).astype(xw.dtype)
 
-    def leaf(xw):
-        mean = jnp.mean(xw.astype(jnp.float32), axis=0, keepdims=True)
-        return jnp.broadcast_to(mean, xw.shape).astype(xw.dtype)
+        return _tree_map_wire(leaf, params, codec, key)
 
-    return _tree_map_wire(leaf, params, codec, key)
+    lf = live.astype(jnp.float32)
+    lw = lf / jnp.maximum(jnp.sum(lf), 1.0)
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    outs = []
+    for i, x in enumerate(leaves):
+        xw, back = _encode_leaf(codec, x, key, i)
+        mean = jnp.tensordot(lw, xw.astype(jnp.float32), axes=1)
+        y = back(jnp.broadcast_to(mean[None], xw.shape).astype(xw.dtype))
+        outs.append(jnp.where(live.reshape((x.shape[0],)
+                                           + (1,) * (x.ndim - 1)), y, x))
+    return jax.tree_util.tree_unflatten(treedef, outs)
 
 
-def merged_model_tree(params):
-    """Per-leaf averaged model (f32 leaves, agent axis dropped)."""
-    return jax.tree.map(lambda x: jnp.mean(x.astype(jnp.float32), axis=0),
-                        params)
+def merged_model_tree(params, live=None):
+    """Per-leaf averaged model (f32 leaves, agent axis dropped).
+    ``live`` ((m,) bool) averages the live agents' rows only."""
+    if live is None:
+        return jax.tree.map(
+            lambda x: jnp.mean(x.astype(jnp.float32), axis=0), params)
+    lf = live.astype(jnp.float32)
+    lw = lf / jnp.maximum(jnp.sum(lf), 1.0)
+    return jax.tree.map(
+        lambda x: jnp.tensordot(lw, x.astype(jnp.float32), axes=1), params)
 
 
 # ---------------------------------------------------------------------------

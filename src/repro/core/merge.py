@@ -36,7 +36,7 @@ def uniform_merge(params_stacked):
 
 
 def merge_stacked(params_stacked, merger="uniform", stats=None,
-                  weights=None):
+                  weights=None, live=None):
     """The merged (non-stacked, f32-leaf) model of an agent-stacked tree
     under a named merge operator (repro.merging) — the tree-path oracle
     of the segment engine's global rounds.
@@ -45,15 +45,17 @@ def merge_stacked(params_stacked, merger="uniform", stats=None,
     (``{stat_name: {dtype-group: (m, D_g) f32}}`` — e.g.
     ``state["merge_stat"]`` from the panel engine; statistics live in
     panel layout because they are engine state). ``weights`` is the
-    per-agent (m,) weight vector of the 'weighted' operator."""
+    per-agent (m,) weight vector of the 'weighted' operator. ``live``
+    ((m,) bool) merges the live agents only (an elastic run's final
+    merge must not average in dead agents' stale rows)."""
     spec = panel_mod.make_spec(params_stacked)
     return merged_panel_tree(panel_mod.to_panel(params_stacked, spec),
                              spec, merger=merger, stats=stats,
-                             weights=weights)
+                             weights=weights, live=live)
 
 
 def counterfactual_eval(eval_fn, params_stacked, merger="uniform",
-                        stats=None, weights=None):
+                        stats=None, weights=None, live=None):
     """Evaluate the hypothetical globally-merged model WITHOUT modifying
     training state (the light-blue curve of Fig. 2c), under any merge
     operator (``stats``/``weights`` as in :func:`merge_stacked`).
@@ -65,28 +67,31 @@ def counterfactual_eval(eval_fn, params_stacked, merger="uniform",
     an idle 'model' axis (unreduced replication doubles the values; the
     engine-spec path below keeps every op constrained)."""
     return eval_fn(merge_stacked(params_stacked, merger=merger,
-                                 stats=stats, weights=weights))
+                                 stats=stats, weights=weights, live=live))
 
 
-def merged_panel_tree(panel, spec, merger=None, stats=None, weights=None):
+def merged_panel_tree(panel, spec, merger=None, stats=None, weights=None,
+                      live=None):
     """Merged (non-stacked, f32-leaf) model of an ENGINE panel under the
     spec's (or an explicit) operator — the panel-layout counterpart of
     :func:`merge_stacked`. Every op stays constrained to the spec's mesh
     layout, so this is safe to jit on sharded panel states (see
     :func:`counterfactual_eval`)."""
     mg = merging_mod.get_merger(spec.merger if merger is None else merger)
-    row = mg.merge_row(panel, stats=stats, weights=weights, spec=spec)
+    row = mg.merge_row(panel, stats=stats, weights=weights, spec=spec,
+                       live=live)
     return panel_mod.from_panel(row, spec, cast=False)
 
 
 def counterfactual_eval_panel(eval_fn, panel, spec, merger=None,
-                              stats=None, weights=None):
+                              stats=None, weights=None, live=None):
     """:func:`counterfactual_eval` for the engine's panel state
     (``stats`` = ``state["merge_stat"]``): evaluates the hypothetical
     merged model without modifying the panel — what
     ``launch/train.py --eval-merged-every`` measures."""
     return eval_fn(merged_panel_tree(panel, spec, merger=merger,
-                                     stats=stats, weights=weights))
+                                     stats=stats, weights=weights,
+                                     live=live))
 
 
 def gossip_merge_rounds(params_stacked, sampler, rounds: int, rng,

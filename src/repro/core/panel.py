@@ -578,9 +578,27 @@ def global_merge(panel, *, wire_dtype=None,
                    for k, v in out.items()}
 
 
+def _live_weights(live, m):
+    """(m,) f32 convex weights over the live rows (all-dead guards to a
+    zero vector rather than NaN)."""
+    lf = live.astype(jnp.float32)
+    return lf / jnp.maximum(jnp.sum(lf), 1.0)
+
+
 def merged(panel, *, use_pallas: bool = False, block_d: int = 512,
-           interpret: bool = True, spec: Optional[PanelSpec] = None):
-    """The (counterfactual) averaged model as {dtype: (D_dtype,)} f32."""
+           interpret: bool = True, spec: Optional[PanelSpec] = None,
+           live=None):
+    """The (counterfactual) averaged model as {dtype: (D_dtype,)} f32.
+
+    ``live`` ((m,) bool) restricts the mean to the live rows — the
+    elastic-run merge, where a dead agent's stale row must not pollute
+    the average. The masked path is plain XLA (the Pallas reduce kernel
+    is unmasked)."""
+    if live is not None:
+        w = _live_weights(live, next(iter(panel.values())).shape[0])
+        return {k: _constrain_group(
+            jnp.tensordot(w, x.astype(jnp.float32), axes=1), spec, k,
+            merged_panel=True) for k, x in panel.items()}
     if _pallas_ok(use_pallas, spec):
         return {k: panel_mean_consensus(x, block_d=block_d,
                                         interpret=interpret)[0]
@@ -598,11 +616,24 @@ def merged_tree(panel, spec: PanelSpec):
 
 def consensus_distance(panel, *, use_pallas: bool = False,
                        block_d: int = 512, interpret: bool = True,
-                       spec: Optional[PanelSpec] = None):
+                       spec: Optional[PanelSpec] = None, live=None):
     """Xi_t = sqrt((1/m) sum_k ||theta_k - bar||^2) in one fused pass.
-    Sharded: per-shard partial sums of squares + ONE scalar reduce."""
+    Sharded: per-shard partial sums of squares + ONE scalar reduce.
+
+    ``live`` ((m,) bool) computes the consensus of the LIVE rows only —
+    mean and deviations both restricted, normalized by the live count
+    (dead agents' stale rows are not part of the run's consensus)."""
     m = next(iter(panel.values())).shape[0]
     total = jnp.zeros((), jnp.float32)
+    if live is not None:
+        lf = live.astype(jnp.float32)
+        n = jnp.maximum(jnp.sum(lf), 1.0)
+        for x in panel.values():
+            x32 = x.astype(jnp.float32)
+            mean = jnp.tensordot(lf / n, x32, axes=1)
+            total = total + jnp.sum(
+                lf[:, None] * jnp.square(x32 - mean[None]))
+        return jnp.sqrt(total / n)
     pallas = _pallas_ok(use_pallas, spec)
     for x in panel.values():
         if pallas:
@@ -628,14 +659,20 @@ def consensus_from_mean(panel, means):
     return jnp.sqrt(total / m)
 
 
-def panel_norm(panel, axis_mean: bool = False):
+def panel_norm(panel, axis_mean: bool = False, rows=None):
     """Global l2 norm of the panel (f32). With ``axis_mean`` the rows are
-    averaged first (norm of the agent-mean, e.g. for grad-norm metrics)."""
+    averaged first (norm of the agent-mean, e.g. for grad-norm metrics);
+    ``rows`` ((m,) f32 convex weights, e.g. the live mask's
+    :func:`_live_weights`) replaces the uniform mean with a weighted
+    one — the grad norm of an elastic round averages live agents only."""
     total = jnp.zeros((), jnp.float32)
     for x in panel.values():
         x32 = x.astype(jnp.float32)
         if axis_mean:
-            x32 = jnp.mean(x32, axis=0)
+            if rows is None:
+                x32 = jnp.mean(x32, axis=0)
+            else:
+                x32 = jnp.tensordot(rows, x32, axes=1)
         total = total + jnp.sum(jnp.square(x32))
     return jnp.sqrt(total)
 

@@ -27,6 +27,7 @@ from typing import Optional
 
 import numpy as np
 
+from repro.core import faults as faults_mod
 from repro.core import topology as topo
 
 
@@ -39,15 +40,29 @@ class Schedule:
     The schedule only carries the name; the panel engine
     (dsgd.make_panel_segment via PanelSpec.merger) applies it, and the
     cost model is unchanged (every operator is one AllReduce-shaped
-    exchange)."""
+    exchange).
+
+    ``faults`` (a core.faults.FaultPlan) degrades every emitted W to the
+    round's surviving subgraph: gossip matrices through
+    topology.degrade_to_live (dead agents become identity rows, the
+    survivors' lost mass folds into their self-loops), global rounds
+    through topology.fully_connected_live (the sub-AllReduce over the
+    live agents). An agent on its RESYNC round is treated as dead for
+    the MATRIX — the engine performs the rejoin pull itself from the
+    per-round mask (``last_live``), so the W stream stays doubly
+    stochastic. The topology sampler's rng is consumed identically with
+    or without faults, so a faulted run and its fault-free twin share
+    the same underlying W draws — and a resumed run replays the same
+    stream."""
 
     def __init__(self, m: int, rounds: int, kind: str = "random",
                  prob: float = 0.2, seed: int = 0,
-                 merger: str = "uniform"):
+                 merger: str = "uniform", faults=None):
         self.m, self.rounds = m, rounds
         self.sampler = topo.make_sampler(kind, m, prob)
         self.rng = np.random.default_rng(seed)
         self.merger = merger
+        self.faults = faults
         # kind of the last mixing_matrix() call: 'global' | 'idle' |
         # 'gossip'. The launcher reads this to tell the panel engine
         # WHICH rounds are global (dsgd.make_panel_segment
@@ -55,6 +70,10 @@ class Schedule:
         # false-positives when a gossip matrix coincides with the 1/m
         # average (m=2 matched pair, 3-ring, ...)
         self.last_kind = None
+        # liveness mask of the last mixing_matrix() call ((m,) int8 of
+        # faults.DEAD/LIVE/RESYNC, None without a fault plan) — the
+        # launcher stacks these into the engine's (S, m) live argument
+        self.last_live = None
 
     # -- override points ---------------------------------------------------
     def is_global(self, t: int, monitor: Optional[dict] = None) -> bool:
@@ -66,14 +85,23 @@ class Schedule:
     # -- public API ---------------------------------------------------------
     def mixing_matrix(self, t: int, monitor: Optional[dict] = None
                       ) -> np.ndarray:
+        lv = None if self.faults is None else self.faults.mask(t)
+        self.last_live = lv
+        # only fully-LIVE agents appear in the matrix: a RESYNC agent's
+        # row stays identity (the engine pulls it to the live mean from
+        # the mask, outside the wire), a DEAD agent's row/col is e_k
+        alive = None if lv is None else lv == faults_mod.LIVE
         if self.is_global(t, monitor):
             self.last_kind = "global"
-            return topo.fully_connected(self.m)
+            if alive is None:
+                return topo.fully_connected(self.m)
+            return topo.fully_connected_live(alive)
         if self.is_local_only(t):
             self.last_kind = "idle"
             return topo.identity(self.m)
         self.last_kind = "gossip"
-        return self.sampler(t, self.rng)
+        W = self.sampler(t, self.rng)
+        return W if alive is None else topo.degrade_to_live(W, alive)
 
     def round_cost(self, W: np.ndarray) -> float:
         """Wire cost of one round in units of model size P (per agent)."""

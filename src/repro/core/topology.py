@@ -124,6 +124,50 @@ def expected_p(sampler, m: int, rounds: int, rng) -> float:
     return float(1.0 - min(max(lam, 0.0), 1.0))
 
 
+def degrade_to_live(W: np.ndarray, live) -> np.ndarray:
+    """Restrict a mixing matrix to the surviving subgraph.
+
+    Dead agents (``live[k] == False``) neither send nor receive: their
+    rows AND columns become the identity e_k, and every survivor folds
+    the mass it would have exchanged with dead peers back into its own
+    self-loop (the lazy-repair rule). For a symmetric W (every topology
+    in this module) the result is again doubly stochastic, restricted to
+    the live block; for a general row-stochastic W row sums are still
+    preserved. ``live`` all-True returns W unchanged (same float64
+    array semantics, no fault-path drift)."""
+    live = np.asarray(live, bool)
+    Wd = np.array(W, np.float64)
+    if live.all():
+        return Wd
+    m = Wd.shape[0]
+    dead = ~live
+    dropped = Wd[:, dead].sum(axis=1)
+    Wd[:, dead] = 0.0
+    Wd[dead, :] = 0.0
+    idx = np.arange(m)
+    Wd[idx, idx] += np.where(live, dropped, 0.0)
+    Wd[idx[dead], idx[dead]] = 1.0
+    return Wd
+
+
+def fully_connected_live(live) -> np.ndarray:
+    """Global-merge matrix over the live subgraph: every live row is the
+    uniform mean over the live agents (a sub-AllReduce), dead rows stay
+    the identity e_k — so under a lossy wire codec the dead agents are
+    idle rows and their parameters pass through bit-exactly. Doubly
+    stochastic for any live mask; all-dead degrades to the identity."""
+    live = np.asarray(live, bool)
+    m = live.shape[0]
+    n = int(live.sum())
+    if n == 0:
+        return identity(m)
+    W = np.zeros((m, m))
+    W[np.ix_(live, live)] = 1.0 / n
+    idx = np.flatnonzero(~live)
+    W[idx, idx] = 1.0
+    return W
+
+
 def make_sampler(kind: str, m: int, prob: float = 0.2):
     """Returns sampler(t, rng) -> W for a named topology family."""
     if kind == "random":

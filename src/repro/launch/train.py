@@ -30,6 +30,7 @@ import argparse
 import dataclasses
 import json
 import os
+import signal
 import time
 
 import jax
@@ -40,9 +41,10 @@ from jax.sharding import PartitionSpec as P
 
 from repro import merging as merging_mod
 from repro import wire as wire_mod
-from repro.checkpoint import save
+from repro.checkpoint import Checkpointer, save
 from repro.configs import get_config
 from repro.core import dsgd
+from repro.core import faults as faults_mod
 from repro.core import merge as merge_mod
 from repro.core import panel as panel_mod
 from repro.core.schedule import make_schedule
@@ -147,6 +149,31 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="results/train")
     ap.add_argument("--save-merged", default="")
+    ap.add_argument("--faults", default="",
+                    help="deterministic fault plan 'AGENT@KILL[-REJOIN]' "
+                         "joined by ';' (core.faults.FaultPlan.parse): the "
+                         "agent is dead from round KILL, rejoins at round "
+                         "REJOIN by pulling the live agents' merged model "
+                         "(e.g. '2@5-9;0@3')")
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    help="save a resumable panel checkpoint every N "
+                         "SEGMENTS (0 = off); saves are asynchronous "
+                         "(background commit off a host snapshot)")
+    ap.add_argument("--checkpoint-dir", default="",
+                    help="checkpoint directory (default: "
+                         "OUT/ckpt_<run tag>)")
+    ap.add_argument("--checkpoint-keep", type=int, default=3,
+                    help="retain only the newest K checkpoints")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the newest good checkpoint in the "
+                         "checkpoint directory (bit-exact continuation: "
+                         "restores the panel state, rng streams, schedule "
+                         "rng and round counter); starts fresh when the "
+                         "directory is empty")
+    ap.add_argument("--die-after-segments", type=int, default=0,
+                    help="fault-injection harness hook: SIGKILL the "
+                         "process after N segments (checkpoints, if "
+                         "enabled, are flushed first)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -168,14 +195,41 @@ def main():
         batch_sharding = NamedSharding(mesh, P(None, None, ("pod", "agent")))
         print(f"panel sharded on mesh {dict(mesh.shape)}")
 
+    plan = (faults_mod.FaultPlan.parse(m, args.faults)
+            if args.faults else None)
+
     # the schedule carries the merge operator of its global rounds; the
     # engine consumes it via the spec — sched.merger is the single source
     kw = {"prob": 0.2, "seed": args.seed, "merger": args.merge}
     if args.schedule == "windowed":
         kw.update(start=args.window_start, end=args.window_end or
                   args.rounds // 10)
+    if plan is not None:
+        kw["faults"] = plan
     sched = make_schedule(args.schedule, m, args.rounds, **kw)
     seg_len = 1 if args.schedule == "adaptive" else max(1, args.segment)
+
+    if args.schedule == "adaptive" and (args.checkpoint_every or
+                                        args.resume):
+        raise SystemExit(
+            "--checkpoint-every/--resume do not support the adaptive "
+            "schedule: its controller state is host-side feedback that a "
+            "checkpoint cannot replay bit-exactly")
+
+    tag = f"{args.arch}_{args.schedule}_a{args.alpha}"
+    if args.merge != "uniform":
+        tag += f"_m{args.merge}"
+
+    ckpt = None
+    if args.checkpoint_every or args.resume:
+        fingerprint = {k: vars(args)[k] for k in (
+            "arch", "preset", "agents", "rounds", "local_steps", "batch",
+            "seq", "segment", "schedule", "window_start", "window_end",
+            "optimizer", "lr", "alpha", "wire", "merge",
+            "eval_merged_every", "seed", "faults")}
+        ckpt = Checkpointer(
+            args.checkpoint_dir or os.path.join(args.out, "ckpt_" + tag),
+            keep=args.checkpoint_keep, fingerprint=fingerprint)
 
     key = jax.random.PRNGKey(args.seed)
     state, spec = dsgd.init_panel_state(model.init_params, opt, m, key,
@@ -197,13 +251,30 @@ def main():
 
     # counterfactual merged-model eval under the run's merge operator
     # (var/fisher/swa read the engine's merge_stat panels); the panel
-    # variant keeps every op constrained to the spec's mesh layout
+    # variant keeps every op constrained to the spec's mesh layout.
+    # ``lv`` masks dead agents out of both the merge and the local mean
+    # when a fault plan is active
     eval_merged = jax.jit(
-        lambda pan, mstat, b: merge_mod.counterfactual_eval_panel(
-            lambda p: eval_loss(p, b), pan, spec, stats=mstat))
-    eval_local = jax.jit(
-        lambda pan, b: jnp.mean(jax.vmap(eval_loss, in_axes=(0, None))(
-            panel_mod.from_panel(pan, spec), b)))
+        lambda pan, mstat, b, lv: merge_mod.counterfactual_eval_panel(
+            lambda p: eval_loss(p, b), pan, spec, stats=mstat, live=lv))
+
+    def _local_mean(pan, b, lv):
+        losses = jax.vmap(eval_loss, in_axes=(0, None))(
+            panel_mod.from_panel(pan, spec), b)
+        if lv is None:
+            return jnp.mean(losses)
+        lf = lv.astype(jnp.float32)
+        return jnp.sum(losses * lf) / jnp.maximum(jnp.sum(lf), 1.0)
+
+    eval_local = jax.jit(_local_mean)
+
+    def alive_after(r):
+        """(m,) bool of agents holding a usable model after round ``r``,
+        or None without a fault plan (dead agents' rows are stale
+        pass-through and excluded from evals)."""
+        if plan is None:
+            return None
+        return jnp.asarray(plan.mask(r) >= faults_mod.LIVE)
 
     # a fixed GLOBAL eval batch (uniform domain mixture = global dist)
     glob_mix = np.ones(lm.num_domains) / lm.num_domains
@@ -215,8 +286,31 @@ def main():
     history = []
     monitor = {}
     comm_cost = 0.0
-    t0 = time.time()
     t = 0
+    seg_idx = 0
+    if args.resume and ckpt is not None:
+        rec = ckpt.restore_latest({"state": state, "key": key})
+        if rec is None:
+            print("resume: no checkpoint found, starting fresh")
+        else:
+            step, tree, meta = rec
+            if mesh is not None:
+                tree["state"] = jax.device_put(
+                    tree["state"],
+                    dsgd.panel_state_shardings(state, spec))
+                tree["key"] = jax.device_put(jnp.asarray(tree["key"]))
+            else:
+                tree = jax.tree.map(jnp.asarray, tree)
+            state, key = tree["state"], tree["key"]
+            t = int(meta["round"])
+            seg_idx = int(meta["segments"])
+            comm_cost = float(meta["comm_cost"])
+            monitor = meta["monitor"]
+            history = meta["history"]
+            rng_np.bit_generator.state = meta["data_rng"]
+            sched.rng.bit_generator.state = meta["sched_rng"]
+            print(f"resumed from checkpoint step {step} (round {t})")
+    t0 = time.time()
     ev = args.eval_merged_every
     while t < args.rounds:
         S = min(seg_len, args.rounds - t)
@@ -225,7 +319,7 @@ def main():
             S = min(S, (t // ev + 1) * ev - t)
         pad = seg_len - S  # tail segment: pad to the common length so the
         # jitted scan is compiled ONCE (padded rounds are masked no-ops)
-        Ws, comm_after, glob = [], [], []
+        Ws, comm_after, glob, lives = [], [], [], []
         for s in range(S):
             W = sched.mixing_matrix(t + s, monitor)
             comm_cost += sched.round_cost(W)
@@ -235,10 +329,15 @@ def main():
             # engine explicitly instead of fingerprinting W (a gossip
             # matrix can coincide with the 1/m average at small m)
             glob.append(sched.last_kind == "global")
+            lives.append(sched.last_live if sched.last_live is not None
+                         else np.ones(m, np.int8))
         Ws += [np.eye(m)] * pad
         glob += [False] * pad
+        lives += [np.ones(m, np.int8)] * pad
         Ws = jnp.asarray(np.stack(Ws), jnp.float32)
         glob = jnp.asarray(glob)
+        live = (jnp.asarray(np.stack(lives), jnp.int32)
+                if plan is not None else None)
         batches = sample_segment_batches(lm, mixtures, S, args.local_steps,
                                          args.batch, args.seq, rng_np)
         if pad:
@@ -250,7 +349,7 @@ def main():
                        for k, v in batches.items()}
         active = jnp.asarray([True] * S + [False] * pad)
         key, k = jax.random.split(key)
-        state, mets = segment_fn(state, batches, Ws, k, active, glob)
+        state, mets = segment_fn(state, batches, Ws, k, active, glob, live)
         mets = jax.device_get(mets)  # ONE transfer for the whole segment
         mets = {k: v[:S] for k, v in mets.items()}
         monitor = {"grad_norm": float(mets["grad_norm"][-1]),
@@ -260,10 +359,12 @@ def main():
         do_eval = (ev == 0 or (t + S) % ev == 0 or t + S == args.rounds)
         merged_l = local_l = None
         if do_eval:
+            lv_now = alive_after(t + S - 1)
             merged_l = float(eval_merged(state["panel"],
                                          state.get("merge_stat"),
-                                         eval_batch))
-            local_l = float(eval_local(state["panel"], eval_batch))
+                                         eval_batch, lv_now))
+            local_l = float(eval_local(state["panel"], eval_batch,
+                                       lv_now))
         for s in range(S):
             # eval is measured once per segment (at its end); intermediate
             # rounds carry None so every record has the same schema
@@ -276,25 +377,42 @@ def main():
                             "local_eval": local_l if last else None,
                             "comm_cost_P": comm_after[s]})
         t += S
+        seg_idx += 1
         ev_txt = ("" if merged_l is None else
                   f"local={local_l:.4f} merged={merged_l:.4f} ")
         print(f"[{t - 1:4d}] loss={history[-1]['train_loss']:.4f} "
               f"{ev_txt}Xi={monitor['consensus']:.3f} "
               f"comm={comm_cost:.1f}P", flush=True)
+        if ckpt is not None and args.checkpoint_every and (
+                seg_idx % args.checkpoint_every == 0 or t >= args.rounds):
+            # async: the host snapshot happens before save() returns, so
+            # the next segment is free to donate the live state
+            ckpt.save(t, {"state": state, "key": key}, block=False, meta={
+                "round": t, "segments": seg_idx, "comm_cost": comm_cost,
+                "monitor": monitor, "history": history,
+                "data_rng": rng_np.bit_generator.state,
+                "sched_rng": sched.rng.bit_generator.state})
+        if args.die_after_segments and seg_idx >= args.die_after_segments:
+            if ckpt is not None:
+                ckpt.wait()
+            print(f"fault injection: dying after segment {seg_idx} "
+                  f"(round {t})", flush=True)
+            os.kill(os.getpid(), signal.SIGKILL)
     print(f"total {time.time()-t0:.1f}s")
+    if ckpt is not None:
+        ckpt.wait()
 
     os.makedirs(args.out, exist_ok=True)
-    tag = f"{args.arch}_{args.schedule}_a{args.alpha}"
-    if args.merge != "uniform":
-        tag += f"_m{args.merge}"
     with open(os.path.join(args.out, tag + ".json"), "w") as f:
         json.dump({"args": vars(args), "history": history}, f, indent=1)
     if args.save_merged:
         # merge with the RUN'S operator (+ its stats), not the uniform
         # mean — the checkpoint must be the model whose merged_eval the
-        # history just reported
+        # history just reported; under a fault plan only agents alive at
+        # the end contribute
         save(args.save_merged, merge_mod.merged_panel_tree(
-            state["panel"], spec, stats=state.get("merge_stat")))
+            state["panel"], spec, stats=state.get("merge_stat"),
+            live=alive_after(args.rounds - 1)))
         print(f"saved {spec.merger}-merged model to", args.save_merged)
 
 

@@ -86,10 +86,16 @@ class Merger:
     # --------------------------------------------------------- merge
     def merge_row(self, panel, stats=None, weights=None, *, spec=None,
                   use_pallas: bool = False, block_d: int = 512,
-                  interpret: bool = True):
-        """One merged row {group: (D_g,) f32} from the (m, D) panel."""
+                  interpret: bool = True, live=None):
+        """One merged row {group: (D_g,) f32} from the (m, D) panel.
+
+        ``live`` ((m,) bool) restricts every operator to the live agents'
+        rows: dead rows contribute NOTHING to the merged row (their
+        parameters and statistics are stale), exactly as if the operator
+        ran on the m'-agent sub-panel."""
         return panel_mod.merged(panel, spec=spec, use_pallas=use_pallas,
-                                block_d=block_d, interpret=interpret)
+                                block_d=block_d, interpret=interpret,
+                                live=live)
 
 
 class UniformMerger(Merger):
@@ -135,22 +141,30 @@ class WeightedMerger(Merger):
     def __init__(self, eps: float = 1e-8):
         self.eps = eps
 
-    def agent_weights(self, panel):
+    def agent_weights(self, panel, live=None):
         d = jnp.zeros((), jnp.float32)
         for x in panel.values():
             x32 = x.astype(jnp.float32)
-            mu = jnp.mean(x32, axis=0, keepdims=True)
+            if live is None:
+                mu = jnp.mean(x32, axis=0, keepdims=True)
+            else:
+                lw = panel_mod._live_weights(live, x32.shape[0])
+                mu = jnp.tensordot(lw, x32, axes=1)[None]
             d = d + jnp.sum(jnp.square(x32 - mu), axis=1)
         w = 1.0 / (d + self.eps)
+        if live is not None:
+            w = w * live.astype(jnp.float32)
         return w / jnp.sum(w)
 
     def merge_row(self, panel, stats=None, weights=None, *, spec=None,
                   use_pallas: bool = False, block_d: int = 512,
-                  interpret: bool = True):
+                  interpret: bool = True, live=None):
         if weights is None:
-            w = self.agent_weights(panel)
+            w = self.agent_weights(panel, live=live)
         else:
             w = jnp.asarray(weights, jnp.float32)
+            if live is not None:
+                w = w * live.astype(jnp.float32)
             w = w / jnp.sum(w)
         row = {k: jnp.tensordot(w, x.astype(jnp.float32), axes=1)
                for k, x in panel.items()}
@@ -189,7 +203,7 @@ class VarMerger(Merger):
 
     def merge_row(self, panel, stats=None, weights=None, *, spec=None,
                   use_pallas: bool = False, block_d: int = 512,
-                  interpret: bool = True):
+                  interpret: bool = True, live=None):
         if stats is None:
             raise ValueError(
                 "merger 'var' needs its trajectory stats panels "
@@ -199,6 +213,11 @@ class VarMerger(Merger):
                               - jnp.square(stats["traj_mu"][k]), 0.0)
                for k in panel}
         w = {k: 1.0 / (v + self.eps) for k, v in var.items()}
+        if live is not None:
+            # the colmerge normalizes by the per-column weight sum, so a
+            # zeroed row is excluded from both numerator and denominator
+            lf = live.astype(jnp.float32)[:, None]
+            w = {k: v * lf for k, v in w.items()}
         return _weighted_colmerge(panel, w, spec, use_pallas, block_d,
                                   interpret)
 
@@ -231,13 +250,16 @@ class FisherMerger(Merger):
 
     def merge_row(self, panel, stats=None, weights=None, *, spec=None,
                   use_pallas: bool = False, block_d: int = 512,
-                  interpret: bool = True):
+                  interpret: bool = True, live=None):
         if stats is None:
             raise ValueError(
                 "merger 'fisher' needs its Fisher stats panel (stats=...);"
                 " build it with init_stats / init_panel_state("
                 "merger='fisher')")
         w = {k: stats["fisher"][k] + self.eps for k in panel}
+        if live is not None:
+            lf = live.astype(jnp.float32)[:, None]
+            w = {k: v * lf for k, v in w.items()}
         return _weighted_colmerge(panel, w, spec, use_pallas, block_d,
                                   interpret)
 
@@ -258,13 +280,22 @@ class TiesMerger(Merger):
 
     def merge_row(self, panel, stats=None, weights=None, *, spec=None,
                   use_pallas: bool = False, block_d: int = 512,
-                  interpret: bool = True):
+                  interpret: bool = True, live=None):
         pallas = panel_mod._pallas_ok(use_pallas, spec)
         out = {}
         for k, x in panel.items():
             x32 = x.astype(jnp.float32)
-            ref_row = jnp.mean(x32, axis=0)
-            tau = x32 - ref_row[None]
+            if live is None:
+                ref_row = jnp.mean(x32, axis=0)
+                tau = x32 - ref_row[None]
+            else:
+                lw = panel_mod._live_weights(live, x32.shape[0])
+                ref_row = jnp.tensordot(lw, x32, axes=1)
+                # a zero tau row is inert through trim + election +
+                # agreeing-mean, so masking dead rows to zero makes the
+                # result exactly the live sub-panel's TIES merge
+                tau = (x32 - ref_row[None]) * live.astype(
+                    jnp.float32)[:, None]
             thresh = ref_mod.ties_thresh_ref(tau, self.trim)
             if pallas:
                 dev = merge_kernels.ties_colmerge(tau, thresh,
@@ -304,7 +335,7 @@ class SwaMerger(Merger):
 
     def merge_row(self, panel, stats=None, weights=None, *, spec=None,
                   use_pallas: bool = False, block_d: int = 512,
-                  interpret: bool = True):
+                  interpret: bool = True, live=None):
         if stats is None:
             raise ValueError(
                 "merger 'swa' needs its accumulator stats panel "
@@ -312,7 +343,7 @@ class SwaMerger(Merger):
                 "init_panel_state(merger='swa')")
         return panel_mod.merged(stats["swa"], spec=spec,
                                 use_pallas=use_pallas, block_d=block_d,
-                                interpret=interpret)
+                                interpret=interpret, live=live)
 
 
 MERGERS = {
@@ -341,7 +372,7 @@ def get_merger(name):
 def merge_panel(panel, merger, *, stats=None, weights=None, spec=None,
                 wire_dtype=None, key=None, err=None,
                 use_pallas: bool = False, block_d: int = 512,
-                interpret: bool = True):
+                interpret: bool = True, live=None):
     """One global merge ROUND through an operator: every agent transmits
     its panel through the spec's wire-codec policy (exactly like
     ``panel.global_merge`` — stochastic codecs take ``key=``, error
@@ -356,6 +387,11 @@ def merge_panel(panel, merger, *, stats=None, weights=None, spec=None,
     codec entirely: nothing travels the parameter wire, so nothing may
     be quantized and the EF residual passes through untouched (the idle-
     round rule).
+
+    ``live`` ((m,) bool) makes the round elastic: only live rows feed
+    the operator, only live rows receive the broadcast (dead agents'
+    parameter AND residual rows pass through bit-exactly — the idle-row
+    rule applied per agent), and the merged row is the live sub-panel's.
 
     Returns ``(mixed, row, new_err)``: the broadcast (m, D) panel in
     storage dtypes, the merged {group: (D_g,) f32} row, and the updated
@@ -399,17 +435,29 @@ def merge_panel(panel, merger, *, stats=None, weights=None, spec=None,
         new_err = err
     row = merger.merge_row(enc, stats=stats, weights=weights, spec=spec,
                            use_pallas=use_pallas, block_d=block_d,
-                           interpret=interpret)
+                           interpret=interpret, live=live)
+    lcol = None if live is None else live[:, None]
     mixed = {}
     for k, x in panel.items():
         if delta[k]:
             y32 = jnp.broadcast_to(row[k][None], x.shape)
+            if lcol is not None:
+                # dead rows keep their params AND their mirror: they
+                # did not see this merge, so the next delta mix must
+                # still pull against their pre-merge mirror
+                y32 = jnp.where(lcol, y32, x.astype(jnp.float32))
             mixed[k] = panel_mod._constrain_group(backs[k](y32), spec, k)
             if new_err is not None:
-                new_err[k] = panel_mod._constrain_group(
-                    y32.astype(jnp.float32), spec, k)
+                ne = y32.astype(jnp.float32)
+                if lcol is not None:
+                    ne = jnp.where(lcol, ne, err[k])
+                new_err[k] = panel_mod._constrain_group(ne, spec, k)
             continue
         y = backs[k](jnp.broadcast_to(row[k][None], x.shape)
                      .astype(enc[k].dtype))
+        if lcol is not None:
+            y = jnp.where(lcol, y, x)
+            if new_err is not None:
+                new_err[k] = jnp.where(lcol, new_err[k], err[k])
         mixed[k] = panel_mod._constrain_group(y, spec, k)
     return mixed, row, new_err

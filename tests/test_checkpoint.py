@@ -1,0 +1,322 @@
+"""Resumable checkpointing: the versioned blob format (bit-exact mixed
+f32/bf16 round-trips, writable restores, atomic writes, corrupt/torn
+detection, structure-drift errors naming the offending key, legacy
+format), the manifest-based Checkpointer (retention, async commits,
+fingerprint guard, corrupt-latest fallback), segment-level bit-exact
+resume through the lossy-wire + statistical-merger engine, and sharded
+save -> restore -> re-shard parity on the debug mesh."""
+import json
+import os
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointCorruptError, Checkpointer
+from repro.checkpoint import io as ckpt_io
+from repro.checkpoint import restore, save
+from repro.core import dsgd, topology
+from repro.optim import make_optimizer
+
+
+def _mixed_state(m=4, seed=0):
+    """A full panel train state with MIXED dtype groups (bf16 params ride
+    along): int8_ef residuals + fisher statistics panels included."""
+    def init_params(rng):
+        k1, k2 = jax.random.split(rng)
+        return {"w": jax.random.normal(k1, (6, 3)) * 0.1,
+                "e": jax.random.normal(k2, (5,), jnp.bfloat16),
+                "b": jnp.zeros(3)}
+
+    opt = make_optimizer("adamw", 1e-2)
+    return dsgd.init_panel_state(init_params, opt, m,
+                                 jax.random.PRNGKey(seed), wire="int8_ef",
+                                 merger="fisher")
+
+
+def _randomized(state, seed=1):
+    """Fill every leaf with fresh values (the init state's zeros would
+    round-trip trivially)."""
+    rng = np.random.default_rng(seed)
+    return jax.tree.map(
+        lambda x: jnp.asarray(
+            rng.normal(size=x.shape).astype(np.float32)).astype(x.dtype),
+        state)
+
+
+# ------------------------------------------------------------ blob format
+
+
+def test_roundtrip_full_state_bit_exact(tmp_path):
+    state, _ = _mixed_state()
+    state = _randomized(state)
+    path = str(tmp_path / "s.ckpt")
+    save(path, state)
+    back = restore(path, state)
+    ref = jax.tree_util.tree_flatten_with_path(state)[0]
+    for (kp, a), b in zip(ref, jax.tree.leaves(back)):
+        assert np.asarray(a).dtype == b.dtype, kp
+        np.testing.assert_array_equal(np.asarray(a), b)
+    assert {"float32", "bfloat16"} <= set(state["panel"])
+
+
+def test_restore_returns_writable_arrays(tmp_path):
+    """Regression: np.frombuffer views are READ-ONLY; a restore must copy
+    so jax donation / in-place host mutation work downstream."""
+    state, _ = _mixed_state()
+    path = str(tmp_path / "s.ckpt")
+    save(path, state)
+    back = restore(path, state)
+    for leaf in jax.tree.leaves(back):
+        assert leaf.flags.writeable
+        leaf.flat[0] = leaf.flat[0]  # must not raise
+
+
+def test_save_is_atomic_no_stray_tmp(tmp_path):
+    state, _ = _mixed_state()
+    save(str(tmp_path / "s.ckpt"), state)
+    assert sorted(os.listdir(tmp_path)) == ["s.ckpt"]
+
+
+def test_meta_round_trips_pcg64_state(tmp_path):
+    rng = np.random.default_rng(123)
+    rng.normal(size=17)  # advance so the state is non-trivial
+    path = str(tmp_path / "s.ckpt")
+    save(path, {"x": jnp.zeros(3)},
+         meta={"rng": rng.bit_generator.state, "round": 7})
+    _, meta = restore(path, {"x": jnp.zeros(3)}, with_meta=True)
+    assert meta["round"] == 7
+    rng2 = np.random.default_rng(0)
+    rng2.bit_generator.state = meta["rng"]
+    np.testing.assert_array_equal(rng.normal(size=5), rng2.normal(size=5))
+
+
+def test_restore_errors_name_the_offending_key(tmp_path):
+    like = {"a": jnp.zeros((2, 3)), "b": jnp.zeros(4, jnp.bfloat16)}
+    path = str(tmp_path / "s.ckpt")
+    save(path, like)
+    with pytest.raises(KeyError, match="missing key '.*c'"):
+        restore(path, {**like, "c": jnp.zeros(1)})
+    with pytest.raises(ValueError, match="keys the reference tree does "
+                                         "not.*'b'"):
+        restore(path, {"a": like["a"]})
+    with pytest.raises(ValueError, match="'a' has shape"):
+        restore(path, {**like, "a": jnp.zeros((3, 2))})
+    with pytest.raises(ValueError, match="'b' has dtype"):
+        restore(path, {**like, "b": jnp.zeros(4, jnp.float16)})
+
+
+def test_corrupt_and_torn_files_detected(tmp_path):
+    state = {"x": jnp.arange(64, dtype=jnp.float32)}
+    path = str(tmp_path / "s.ckpt")
+    save(path, state)
+    blob = open(path, "rb").read()
+    with open(path, "wb") as f:  # torn write: truncated tail
+        f.write(blob[: len(blob) // 2])
+    with pytest.raises(CheckpointCorruptError):
+        restore(path, state)
+    flipped = bytearray(blob)
+    flipped[-8] ^= 0xFF  # bit rot: checksum must catch it
+    with open(path, "wb") as f:
+        f.write(bytes(flipped))
+    with pytest.raises(CheckpointCorruptError, match="checksum"):
+        restore(path, state)
+
+
+def test_legacy_flat_format_still_restores(tmp_path):
+    state, _ = _mixed_state()
+    state = _randomized(state, seed=3)
+    flat = ckpt_io._flatten_to_host(state)
+    legacy = msgpack.packb(
+        {k: {"dtype": np.dtype(a.dtype).name, "shape": list(a.shape),
+             "data": a.tobytes()} for k, a in flat.items()})
+    path = str(tmp_path / "legacy.ckpt")
+    with open(path, "wb") as f:
+        f.write(legacy)
+    back, meta = restore(path, state, with_meta=True)
+    assert meta == {}
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), b)
+
+
+# ------------------------------------------------------------ Checkpointer
+
+
+def test_checkpointer_retention_and_manifest(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2, fingerprint={"run": "a"})
+    like = {"x": jnp.zeros(8)}
+    for step in (1, 2, 3):
+        ck.save(step, {"x": jnp.full(8, float(step))})
+    assert ck.latest_step() == 3
+    files = sorted(f for f in os.listdir(tmp_path) if f.endswith(".ckpt"))
+    assert files == ["step_00000002.ckpt", "step_00000003.ckpt"]
+    man = json.load(open(tmp_path / "MANIFEST.json"))
+    assert [c["step"] for c in man["checkpoints"]] == [2, 3]
+    assert man["fingerprint"] == {"run": "a"}
+    assert all(c["bytes"] > 0 and "crc" in c for c in man["checkpoints"])
+    step, tree, _ = ck.restore_latest(like)
+    assert step == 3
+    np.testing.assert_array_equal(tree["x"], np.full(8, 3.0))
+
+
+def test_checkpointer_async_save(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=3)
+    ck.save(5, {"x": jnp.arange(4.0)}, meta={"round": 5}, block=False)
+    ck.wait()
+    step, tree, meta = ck.restore_latest({"x": jnp.zeros(4)})
+    assert step == 5 and meta["round"] == 5
+    np.testing.assert_array_equal(tree["x"], np.arange(4.0))
+
+
+def test_checkpointer_corrupt_latest_falls_back(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=3)
+    ck.save(1, {"x": jnp.full(4, 1.0)})
+    ck.save(2, {"x": jnp.full(4, 2.0)})
+    latest = tmp_path / "step_00000002.ckpt"
+    blob = latest.read_bytes()
+    latest.write_bytes(blob[: len(blob) // 2])
+    with pytest.warns(RuntimeWarning, match="corrupt"):
+        step, tree, _ = ck.restore_latest({"x": jnp.zeros(4)})
+    assert step == 1
+    np.testing.assert_array_equal(tree["x"], np.full(4, 1.0))
+
+
+def test_checkpointer_finds_orphan_checkpoints(tmp_path):
+    """A checkpoint whose manifest update was lost (crash between file
+    and manifest write) is still picked up by the directory scan."""
+    ck = Checkpointer(str(tmp_path), keep=3)
+    ck.save(1, {"x": jnp.full(4, 1.0)})
+    save(str(tmp_path / "step_00000009.ckpt"), {"x": jnp.full(4, 9.0)})
+    step, tree, _ = ck.restore_latest({"x": jnp.zeros(4)})
+    assert step == 9
+    np.testing.assert_array_equal(tree["x"], np.full(4, 9.0))
+
+
+def test_checkpointer_fingerprint_guard(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2,
+                      fingerprint={"seed": 0, "wire": "int8_ef"})
+    ck.save(1, {"x": jnp.zeros(2)})
+    # same fingerprint reopens fine
+    Checkpointer(str(tmp_path), keep=2,
+                 fingerprint={"seed": 0, "wire": "int8_ef"})
+    with pytest.raises(ValueError, match="seed"):
+        Checkpointer(str(tmp_path), keep=2,
+                     fingerprint={"seed": 1, "wire": "int8_ef"})
+
+
+# ------------------------------------------------------- bit-exact resume
+
+
+def test_segment_resume_bit_exact(tmp_path):
+    """Launcher resume contract at the engine level: save after segment
+    1, restore, run segment 2 — the final state matches the
+    uninterrupted two-segment run BIT-exactly, through the int8_ef wire
+    (stochastic rounding) and the fisher (non-uniform) merger."""
+    m, H, dim, classes = 4, 2, 8, 3
+
+    def init_params(rng):
+        k1, _ = jax.random.split(rng)
+        return {"w": jax.random.normal(k1, (dim, classes)) * 0.1,
+                "b": jnp.zeros(classes)}
+
+    def loss_fn(p, batch, rng=None):
+        x, y = batch
+        lg = x @ p["w"] + p["b"]
+        return jnp.mean(jax.nn.logsumexp(lg, -1)
+                        - jnp.take_along_axis(lg, y[:, None], -1)[:, 0]), {}
+
+    opt = make_optimizer("adamw", 1e-2)
+    host = np.random.default_rng(0)
+    segs = []
+    for _ in range(2):  # two segments of 2 rounds; last round is global
+        Ws = np.stack([topology.random_matching(m, 0.9, host),
+                       topology.fully_connected(m)])
+        bx = host.normal(size=(2, H, m, 8, dim)).astype(np.float32)
+        by = host.integers(0, classes, size=(2, H, m, 8)).astype(np.int32)
+        segs.append((jnp.asarray(Ws, jnp.float32),
+                     (jnp.asarray(bx), jnp.asarray(by)),
+                     jnp.asarray([False, True])))
+
+    def run(resume_from=None):
+        st, spec = dsgd.init_panel_state(
+            init_params, opt, m, jax.random.PRNGKey(0), wire="int8_ef",
+            merger="fisher")
+        seg = dsgd.make_panel_segment(loss_fn, opt, H, spec)
+        key = jax.random.PRNGKey(7)
+        start = 0
+        if resume_from is not None:
+            rec = jax.tree.map(jnp.asarray, restore(
+                resume_from, {"state": st, "key": key}))
+            st, key = rec["state"], rec["key"]
+            start = 1
+        for i in range(start, 2):
+            Ws, batches, glob = segs[i]
+            key, k = jax.random.split(key)
+            st, _ = seg(st, batches, Ws, k, None, glob)
+            if i == 0:
+                save(str(tmp_path / "mid.ckpt"), {"state": st, "key": key})
+        return jax.tree.map(np.asarray, st)
+
+    full = run()
+    resumed = run(resume_from=str(tmp_path / "mid.ckpt"))
+    for a, b in zip(jax.tree.leaves(full), jax.tree.leaves(resumed)):
+        np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------- sharded state
+
+SHARDED_ROUNDTRIP_SCRIPT = textwrap.dedent("""
+    import json, os, tempfile
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.checkpoint import restore, save
+    from repro.core import dsgd
+    from repro.launch import mesh as mesh_mod
+    from repro.optim import make_optimizer
+
+    mesh = mesh_mod.make_debug_mesh(agents=2, fsdp=2, model=2)
+    m, dim, classes = 2, 16, 4
+
+    def init_params(rng):
+        k1, _ = jax.random.split(rng)
+        return {"w": jax.random.normal(k1, (dim, classes)) * 0.1,
+                "b": jnp.zeros(classes)}
+
+    opt = make_optimizer("adamw", 1e-2)
+    st, spec = dsgd.init_panel_state(init_params, opt, m,
+                                     jax.random.PRNGKey(0), mesh=mesh,
+                                     wire="int8_ef", merger="fisher")
+    rng = np.random.default_rng(1)
+    st = jax.tree.map(
+        lambda x: jax.device_put(
+            jnp.asarray(rng.normal(size=x.shape).astype(np.float32)
+                        ).astype(x.dtype), x.sharding), st)
+    path = os.path.join(tempfile.mkdtemp(), "s.ckpt")
+    save(path, st)
+    host = restore(path, st)
+    shardings = dsgd.panel_state_shardings(st, spec)
+    placed = jax.device_put(host, shardings)
+    exact = all(np.array_equal(np.asarray(a), np.asarray(b)) for a, b in
+                zip(jax.tree.leaves(st), jax.tree.leaves(placed)))
+    resharded = all(
+        b.sharding.is_equivalent_to(sh, b.ndim)
+        for sh, b in zip(jax.tree.leaves(shardings),
+                         jax.tree.leaves(placed)))
+    row_sharded = placed["panel"]["float32"].sharding.is_equivalent_to(
+        shardings["panel"]["float32"], 2)
+    print(json.dumps({"exact": exact, "resharded": resharded,
+                      "row_sharded": bool(row_sharded),
+                      "devices": jax.device_count()}))
+""")
+
+
+def test_sharded_save_restore_reshard_parity(multidevice):
+    """A spec-sharded state saves from the (1,2,2,2) debug mesh, restores
+    on host, and re-shards to the exact same values and layout."""
+    rec = multidevice(SHARDED_ROUNDTRIP_SCRIPT, devices=8)
+    assert rec["devices"] == 8
+    assert rec["exact"] is True
+    assert rec["resharded"] is True
+    assert rec["row_sharded"] is True

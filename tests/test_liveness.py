@@ -1,0 +1,376 @@
+"""Elastic-run liveness: degraded mixing matrices, the per-agent live
+mask through the scanned segment (dead rows bit-exact, survivors match
+the surviving-subgraph oracle, rejoin resyncs without perturbing
+survivors), masked merge operators and masked tree-oracle merges, and
+the FaultPlan parser."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dsgd, faults, gossip, topology
+from repro.core import panel as panel_mod
+from repro.core.schedule import make_schedule
+from repro.merging import MERGERS, get_merger
+from repro.optim import make_optimizer
+
+
+def _toy_problem(m=8, dim=12, classes=4):
+    def init_params(rng):
+        k1, _ = jax.random.split(rng)
+        return {"w": jax.random.normal(k1, (dim, classes)) * 0.1,
+                "b": jnp.zeros(classes)}
+
+    def loss_fn(p, batch, rng=None):
+        x, y = batch
+        lg = x @ p["w"] + p["b"]
+        nll = jnp.mean(jax.nn.logsumexp(lg, -1)
+                       - jnp.take_along_axis(lg, y[:, None], -1)[:, 0])
+        return nll, {}
+
+    return init_params, loss_fn
+
+
+def _batches(S, H, m, dim, classes, rng):
+    bx = jnp.asarray(rng.normal(size=(S, H, m, 8, dim)).astype(np.float32))
+    by = jnp.asarray(rng.integers(0, classes,
+                                  size=(S, H, m, 8)).astype(np.int32))
+    return bx, by
+
+
+def _rows(state, idx):
+    """Slice agent rows out of every (m, ...) leaf of a panel state (the
+    scalar step is kept) — builds the surviving-subgraph oracle state."""
+    m = next(iter(state["panel"].values())).shape[0]
+
+    def f(x):
+        if getattr(x, "ndim", 0) >= 1 and x.shape[0] == m:
+            return x[jnp.asarray(idx)]
+        return x
+
+    return jax.tree.map(f, state)
+
+
+def _host(state):
+    return jax.tree.map(np.asarray, state)
+
+
+# ------------------------------------------------- degraded topologies
+
+
+def test_degrade_to_live_doubly_stochastic():
+    rng = np.random.default_rng(0)
+    W = topology.random_matching(8, 0.7, rng)
+    live = np.array([1, 0, 1, 1, 0, 1, 1, 1], bool)
+    Wd = topology.degrade_to_live(W, live)
+    np.testing.assert_allclose(Wd.sum(0), 1.0, atol=1e-12)
+    np.testing.assert_allclose(Wd.sum(1), 1.0, atol=1e-12)
+    for k in np.flatnonzero(~live):
+        np.testing.assert_array_equal(Wd[k], np.eye(8)[k])
+        np.testing.assert_array_equal(Wd[:, k], np.eye(8)[k])
+    # all-live is the identity transform
+    np.testing.assert_array_equal(
+        topology.degrade_to_live(W, np.ones(8, bool)), W)
+
+
+def test_fully_connected_live_sub_allreduce():
+    live = np.array([0, 1, 1, 0, 1], bool)
+    W = topology.fully_connected_live(live)
+    np.testing.assert_allclose(W.sum(0), 1.0, atol=1e-12)
+    np.testing.assert_allclose(W.sum(1), 1.0, atol=1e-12)
+    sub = W[np.ix_(live, live)]
+    np.testing.assert_allclose(sub, np.full((3, 3), 1 / 3))
+    np.testing.assert_array_equal(
+        topology.fully_connected_live(np.zeros(4, bool)), np.eye(4))
+
+
+def test_schedule_degrades_w_and_reports_live():
+    m, rounds = 5, 8
+    plan = faults.FaultPlan.parse(m, "2@1-4;4@6")
+    sf = make_schedule("final_merge", m, rounds, seed=3, faults=plan)
+    s0 = make_schedule("final_merge", m, rounds, seed=3)
+    for t in range(rounds):
+        Wf = sf.mixing_matrix(t)
+        W = s0.mixing_matrix(t)
+        lv = sf.last_live
+        np.testing.assert_array_equal(lv, plan.mask(t))
+        assert s0.last_live is None
+        alive = lv == faults.LIVE
+        # a RESYNC agent is dead FOR THE MATRIX (identity row); the
+        # fault-free twin consumed the same rng, so the same W draw
+        if sf.last_kind == "global":
+            np.testing.assert_allclose(
+                Wf, topology.fully_connected_live(alive), atol=1e-12)
+        else:
+            np.testing.assert_allclose(
+                Wf, topology.degrade_to_live(W, alive), atol=1e-12)
+
+
+# ------------------------------------------------------ fault plans
+
+
+def test_fault_plan_mask_and_parse_roundtrip():
+    plan = faults.FaultPlan.parse(6, "2@5-9; 0@3")
+    assert str(plan) == "0@3;2@5-9"
+    assert faults.FaultPlan.parse(6, str(plan)).events == plan.events
+    np.testing.assert_array_equal(plan.mask(4), [0, 1, 1, 1, 1, 1])
+    np.testing.assert_array_equal(plan.mask(5), [0, 1, 0, 1, 1, 1])
+    np.testing.assert_array_equal(plan.mask(9), [0, 1, 2, 1, 1, 1])
+    np.testing.assert_array_equal(plan.mask(10), [0, 1, 1, 1, 1, 1])
+    assert not faults.FaultPlan(4)
+    assert plan
+
+
+@pytest.mark.parametrize("spec", [
+    "9@1",        # agent out of range
+    "1@5-5",      # rejoin must be after kill
+    "1@2;1@4",    # second event after an open-ended kill
+    "1@2-6;1@4",  # overlapping kill/rejoin windows
+    "1@x",        # unparsable
+    "oops",
+])
+def test_fault_plan_rejects(spec):
+    with pytest.raises(ValueError):
+        faults.FaultPlan.parse(4, spec)
+
+
+# --------------------------------------------- segment liveness parity
+
+
+def test_all_live_mask_is_noop():
+    """live == all-ones must reproduce live=None through the lossy-wire
+    + statistical-merger path: params/moments/stats BIT-exact; the EF
+    residual is allowed one ulp (the live path is a different compiled
+    graph, and XLA may fuse the codec's x + err - decode differently)."""
+    m, H, S, dim, classes = 4, 2, 3, 8, 3
+    init_params, loss_fn = _toy_problem(m, dim, classes)
+    opt = make_optimizer("adamw", 1e-2)
+    rng = np.random.default_rng(0)
+    Ws = np.stack([topology.random_matching(m, 0.8, rng) for _ in range(2)]
+                  + [topology.fully_connected(m)])
+    Ws = jnp.asarray(Ws, jnp.float32)
+    glob = jnp.asarray([False, False, True])
+    batches = _batches(S, H, m, dim, classes, rng)
+    finals = []
+    for live in (None, jnp.ones((S, m), jnp.int32)):
+        st, spec = dsgd.init_panel_state(
+            init_params, opt, m, jax.random.PRNGKey(0), wire="int8_ef",
+            merger="fisher")
+        seg = dsgd.make_panel_segment(loss_fn, opt, H, spec)
+        st, _ = seg(st, batches, Ws, jax.random.PRNGKey(1), None, glob,
+                    live)
+        finals.append(_host(st))
+    ref, got = finals
+    for part in ("panel", "opt", "merge_stat", "step"):
+        for a, b in zip(jax.tree.leaves(ref[part]),
+                        jax.tree.leaves(got[part])):
+            np.testing.assert_array_equal(a, b)
+    for k in ref["wire_err"]:
+        np.testing.assert_allclose(ref["wire_err"][k], got["wire_err"][k],
+                                   atol=1e-7)
+
+
+def test_kill_mid_segment_dead_rows_bit_exact():
+    """From its kill round on, EVERY state row of a dead agent (params,
+    both moments, EF residual, merge statistics) passes through
+    untouched."""
+    m, H, dim, classes = 4, 2, 8, 3
+    init_params, loss_fn = _toy_problem(m, dim, classes)
+    opt = make_optimizer("adamw", 1e-2)
+    st, spec = dsgd.init_panel_state(
+        init_params, opt, m, jax.random.PRNGKey(0), wire="int8_ef",
+        merger="fisher")
+    seg = dsgd.make_panel_segment(loss_fn, opt, H, spec)
+    rng = np.random.default_rng(1)
+    glob = jnp.asarray([False, False, False, True])
+
+    # phase 1: two all-live rounds, so the dead rows are NON-trivial
+    Ws1 = jnp.asarray(np.stack(
+        [topology.random_matching(m, 0.9, rng) for _ in range(2)]),
+        jnp.float32)
+    b1 = _batches(2, H, m, dim, classes, rng)
+    st, _ = seg(st, b1, Ws1, jax.random.PRNGKey(1), None, glob[:2])
+    snap = _host(st)
+
+    # phase 2: agent 3 dies; its rows must stay at their phase-1 values
+    live = np.ones(m, bool)
+    live[3] = False
+    Ws2 = np.stack([topology.degrade_to_live(
+        topology.random_matching(m, 0.9, rng), live),
+        topology.fully_connected_live(live)])
+    b2 = _batches(2, H, m, dim, classes, rng)
+    st = jax.tree.map(jnp.asarray, snap)
+    st, _ = seg(st, b2, jnp.asarray(Ws2, jnp.float32),
+                jax.random.PRNGKey(2), None, glob[2:],
+                jnp.asarray(np.stack([live, live]), jnp.int32))
+    out = _host(st)
+    for part in ("panel", "wire_err"):
+        for k in out[part]:
+            np.testing.assert_array_equal(out[part][k][3], snap[part][k][3])
+    for mom in ("m", "v"):
+        for k in out["opt"][mom]:
+            np.testing.assert_array_equal(out["opt"][mom][k][3],
+                                          snap["opt"][mom][k][3])
+    for name in out["merge_stat"]:
+        for k in out["merge_stat"][name]:
+            np.testing.assert_array_equal(out["merge_stat"][name][k][3],
+                                          snap["merge_stat"][name][k][3])
+    # ... and the survivors did move
+    assert not np.array_equal(out["panel"]["float32"][0],
+                              snap["panel"]["float32"][0])
+
+
+def test_survivors_match_subgraph_oracle():
+    """With agent 3 dead from round 0, the survivors' trajectory equals
+    an m'=3 run on the degraded W's live sub-block (the loss ignores its
+    rng, so the m-dependent per-agent rng split is immaterial)."""
+    m, H, S, dim, classes = 4, 2, 4, 8, 3
+    init_params, loss_fn = _toy_problem(m, dim, classes)
+    opt = make_optimizer("sgd", 1e-2)
+    st4, spec = dsgd.init_panel_state(init_params, opt, m,
+                                      jax.random.PRNGKey(0))
+    seg = dsgd.make_panel_segment(loss_fn, opt, H, spec, donate=False)
+    live = np.array([1, 1, 1, 0], bool)
+    rng = np.random.default_rng(2)
+    Ws = np.stack([topology.degrade_to_live(
+        topology.random_matching(m, 0.9, rng), live) for _ in range(S - 1)]
+        + [topology.fully_connected_live(live)])
+    glob = jnp.asarray([False] * (S - 1) + [True])
+    bx, by = _batches(S, H, m, dim, classes, rng)
+    lv = jnp.asarray(np.stack([live] * S), jnp.int32)
+    out4, _ = seg(st4, (bx, by), jnp.asarray(Ws, jnp.float32),
+                  jax.random.PRNGKey(1), None, glob, lv)
+
+    st3 = _rows(st4, [0, 1, 2])
+    out3, _ = seg(st3, (bx[:, :, :3], by[:, :, :3]),
+                  jnp.asarray(Ws[:, :3, :3], jnp.float32),
+                  jax.random.PRNGKey(1), None, glob)
+    for k in out4["panel"]:
+        np.testing.assert_allclose(np.asarray(out4["panel"][k][:3]),
+                                   np.asarray(out3["panel"][k]),
+                                   atol=1e-6, rtol=1e-6)
+    # the dead agent never trained: still at its init row
+    np.testing.assert_array_equal(np.asarray(out4["panel"]["float32"][3]),
+                                  np.asarray(st4["panel"]["float32"][3]))
+
+
+def test_rejoin_resyncs_without_perturbing_survivors():
+    """Plan A (agent 1 rejoins at round 3) and plan B (agent 1 dead for
+    good) must give BIT-identical survivor rows; the rejoiner comes back
+    holding the live agents' post-mix mean with freshly zeroed moments."""
+    m, H, S, dim, classes = 4, 2, 4, 8, 3
+    init_params, loss_fn = _toy_problem(m, dim, classes)
+    opt = make_optimizer("adamw", 1e-2)
+    rng = np.random.default_rng(3)
+    raw = [topology.random_matching(m, 0.9, rng) for _ in range(S)]
+    bx, by = _batches(S, H, m, dim, classes, rng)
+    outs = []
+    for spec_str in ("1@1-3", "1@1"):
+        plan = faults.FaultPlan.parse(m, spec_str)
+        lv = np.stack([plan.mask(t) for t in range(S)])
+        Ws = np.stack([topology.degrade_to_live(
+            raw[t], lv[t] == faults.LIVE) for t in range(S)])
+        st, spec = dsgd.init_panel_state(init_params, opt, m,
+                                         jax.random.PRNGKey(0))
+        seg = dsgd.make_panel_segment(loss_fn, opt, H, spec)
+        st, _ = seg(st, (bx, by), jnp.asarray(Ws, jnp.float32),
+                    jax.random.PRNGKey(1), None, None,
+                    jnp.asarray(lv, jnp.int32))
+        outs.append(_host(st))
+    rejoin, gone = outs
+    surv = [0, 2, 3]
+    for k in rejoin["panel"]:
+        np.testing.assert_array_equal(rejoin["panel"][k][surv],
+                                      gone["panel"][k][surv])
+    # the rejoined row is the live agents' post-mix mean ...
+    for k in rejoin["panel"]:
+        np.testing.assert_allclose(
+            rejoin["panel"][k][1],
+            rejoin["panel"][k][surv].astype(np.float32).mean(0).astype(
+                rejoin["panel"][k].dtype),
+            atol=1e-6)
+    # ... with re-initialized (zero) moments, unlike the dead row's
+    for mom in ("m", "v"):
+        for k in rejoin["opt"][mom]:
+            np.testing.assert_array_equal(
+                rejoin["opt"][mom][k][1],
+                np.zeros_like(rejoin["opt"][mom][k][1]))
+        assert any(np.any(gone["opt"][mom][k][1])
+                   for k in gone["opt"][mom])
+
+
+# --------------------------------------------- masked merge operators
+
+
+@pytest.mark.parametrize("name", sorted(MERGERS))
+def test_masked_merge_row_matches_subpanel(name):
+    """merge_row(live=mask) must equal the operator on the live agents'
+    sub-panel for EVERY registered operator — dead rows contribute
+    nothing, not even through normalization terms."""
+    m = 6
+    live = np.array([1, 0, 1, 1, 0, 1], bool)
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    panel = {"float32": jax.random.normal(ks[0], (m, 24)),
+             "bfloat16": jax.random.normal(ks[1], (m, 10), jnp.bfloat16)}
+    gpan = {k: jax.random.normal(ks[2], v.shape).astype(v.dtype)
+            for k, v in panel.items()}
+    mg = get_merger(name)
+    stats = mg.init_stats(panel)
+    if stats:
+        stats = mg.update_local(stats, gpan)
+        stats = mg.update_round(stats, panel)
+    sub = jnp.asarray(np.flatnonzero(live))
+    sub_panel = {k: v[sub] for k, v in panel.items()}
+    sub_stats = ({n: {k: v[sub] for k, v in s.items()}
+                  for n, s in stats.items()} if stats else None)
+    full = mg.merge_row(panel, stats or None, live=jnp.asarray(live))
+    ref = mg.merge_row(sub_panel, sub_stats)
+    for k in full:
+        np.testing.assert_allclose(np.asarray(full[k], np.float32),
+                                   np.asarray(ref[k], np.float32),
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_gossip_tree_oracle_masked_merge():
+    """gossip.global_merge_tree(live=) — live rows take the live mean,
+    dead rows pass through; merged_model_tree(live=) averages live rows
+    only."""
+    m = 5
+    live = jnp.asarray(np.array([1, 1, 0, 1, 0], bool))
+    ks = jax.random.split(jax.random.PRNGKey(9), 2)
+    tree = {"w": jax.random.normal(ks[0], (m, 7, 3)),
+            "b": jax.random.normal(ks[1], (m, 4), jnp.bfloat16)}
+    out = gossip.global_merge_tree(tree, live=live)
+    idx = np.flatnonzero(np.asarray(live))
+    for k in tree:
+        x = np.asarray(tree[k], np.float32)
+        y = np.asarray(out[k], np.float32)
+        mean = x[idx].mean(0)
+        for i in range(m):
+            if live[i]:
+                np.testing.assert_allclose(
+                    y[i], mean.astype(np.asarray(tree[k]).dtype
+                                      ).astype(np.float32), atol=1e-6)
+            else:
+                np.testing.assert_array_equal(np.asarray(out[k][i]),
+                                              np.asarray(tree[k][i]))
+    mm = gossip.merged_model_tree(tree, live=live)
+    for k in tree:
+        np.testing.assert_allclose(
+            np.asarray(mm[k]),
+            np.asarray(tree[k], np.float32)[idx].mean(0), atol=1e-6)
+
+
+def test_panel_masked_merged_and_consensus():
+    m = 6
+    live = jnp.asarray(np.array([1, 0, 1, 1, 0, 1], bool))
+    idx = np.flatnonzero(np.asarray(live))
+    x = jax.random.normal(jax.random.PRNGKey(11), (m, 20))
+    pan = {"float32": x}
+    row = panel_mod.merged(pan, live=live)
+    np.testing.assert_allclose(np.asarray(row["float32"]),
+                               np.asarray(x)[idx].mean(0), atol=1e-6)
+    xi = float(panel_mod.consensus_distance(pan, live=live))
+    sub = np.asarray(x)[idx]
+    ref = np.sqrt(((sub - sub.mean(0)) ** 2).sum() / len(idx))
+    assert xi == pytest.approx(ref, rel=1e-5)
