@@ -1,0 +1,162 @@
+"""Serving benchmark: prefill throughput, per-step decode latency, and
+continuous-batching slot occupancy for the merged-model engine.
+
+``python -m benchmarks.serve_bench`` writes BENCH_serve.json with three
+sections per arch:
+
+* **prefill** — tokens/s through the jitted exact-length prefill (the
+  engine's admission path), post-compile, at the demo prompt length;
+* **decode** — wall-clock per ``ServingEngine.step()`` at FULL slot
+  occupancy (every slot live, one (C,) token fetch per tick — the fetch is
+  the tick's only host sync, so the timing includes the whole jitted
+  decode+sample dispatch): mean / p50 / p90 microseconds, and the derived
+  decode tokens/s (C tokens per step);
+* **engine** — an end-to-end heterogeneous serve run (2 prompt-length
+  buckets, staggered max_new): requests/s, tokens/s, slot-occupancy
+  (live-slot-steps over capacity-steps) and scheduler stats.
+
+CI runs this on the cpu-preset reduced configs and uploads the JSON as an
+artifact next to BENCH_panel.json; the committed copy is the reference.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serving import Request, ServingEngine
+
+ARCHS = ["olmo-1b", "recurrentgemma-2b", "qwen2-vl-72b"]
+REDUCED = {"recurrentgemma-2b": {"layers": 3}}
+
+
+def _requests(cfg, n, lengths, max_new, seed=1):
+    k_prompt, k_mm, k_frames = jax.random.split(jax.random.PRNGKey(seed), 3)
+    reqs = []
+    for i in range(n):
+        S = lengths[i % len(lengths)]
+        toks = np.asarray(jax.random.randint(
+            jax.random.fold_in(k_prompt, i), (S,), 0, cfg.vocab_size),
+            np.int32)
+        extras = {}
+        if cfg.mm_prefix > 0:
+            extras["patch_embeds"] = np.asarray(jax.random.normal(
+                jax.random.fold_in(k_mm, i), (cfg.mm_prefix, cfg.d_model)))
+        if cfg.encoder_layers:
+            extras["frame_embeds"] = np.asarray(jax.random.normal(
+                jax.random.fold_in(k_frames, i), (S, cfg.d_model)))
+        reqs.append(Request(rid=i, tokens=toks, max_new=max_new[i % len(
+            max_new)], extras=extras))
+    return reqs
+
+
+def bench_arch(arch, *, concurrency=4, prompt_len=32, max_new=16, reps=16):
+    cfg = get_config(arch).reduced(d_model=128, vocab=256,
+                                   **REDUCED.get(arch, {}))
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    long_new = reps + 8  # decode-latency fill keeps slots live all reps
+    max_len = prompt_len + max(0, cfg.mm_prefix) + max(max_new, long_new)
+    eng = ServingEngine(model, params, max_concurrency=concurrency,
+                        max_len=max_len)
+
+    # -- prefill throughput (post-compile, exact-length admission path)
+    req = _requests(cfg, 1, [prompt_len], [max_new])[0]
+    batch = {"tokens": jax.numpy.asarray(req.tokens[None])}
+    for k, v in req.extras.items():
+        batch[k] = jax.numpy.asarray(v)[None]
+    jax.block_until_ready(eng._prefill(params, batch))  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = eng._prefill(params, batch)
+    jax.block_until_ready(out)
+    prefill_us = (time.perf_counter() - t0) / reps * 1e6
+    n_prefill_tok = prompt_len + max(0, cfg.mm_prefix)
+    prefill = {"prompt_len": prompt_len, "tokens": n_prefill_tok,
+               "us_per_prefill": round(prefill_us, 1),
+               "tokens_per_s": round(n_prefill_tok / (prefill_us / 1e6), 1)}
+
+    # -- per-step decode latency at FULL occupancy
+    fill = _requests(cfg, concurrency, [prompt_len], [long_new])
+    for r in fill:
+        eng.submit(r)
+    eng.admit()
+    assert len(eng.live_slots()) == concurrency
+    eng.step()  # compile the slotted decode step
+    lat = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        eng.step()  # blocks on the (C,) token fetch — full step latency
+        lat.append((time.perf_counter() - t0) * 1e6)
+    lat = np.asarray(lat)
+    decode = {"slots": concurrency,
+              "us_per_step_mean": round(float(lat.mean()), 1),
+              "us_per_step_p50": round(float(np.percentile(lat, 50)), 1),
+              "us_per_step_p90": round(float(np.percentile(lat, 90)), 1),
+              "decode_tokens_per_s": round(
+                  concurrency / (float(lat.mean()) / 1e6), 1)}
+    for s in eng.live_slots():
+        eng.evict(s)
+
+    # -- end-to-end heterogeneous serve (fresh stats)
+    eng.stats.update(ticks=0, live_slot_ticks=0, admitted=0, retired=0,
+                     prefill_tokens=0)
+    reqs = _requests(cfg, 2 * concurrency,
+                     [prompt_len, max(1, prompt_len // 2)],
+                     [max_new, max(1, max_new // 2), max_new - 2], seed=2)
+    t0 = time.perf_counter()
+    served = eng.serve(reqs)
+    dt = time.perf_counter() - t0
+    n_tok = sum(len(v) for v in served.values())
+    engine = {"requests": len(served), "tokens": n_tok,
+              "seconds": round(dt, 2),
+              "tokens_per_s": round(n_tok / dt, 1),
+              "requests_per_s": round(len(served) / dt, 1),
+              "slot_occupancy": round(eng.occupancy, 3),
+              "ticks": eng.stats["ticks"],
+              "prefill_tokens": eng.stats["prefill_tokens"]}
+
+    return {"d_model": cfg.d_model, "layers": cfg.num_layers,
+            "vocab": cfg.vocab_size, "padded_vocab": cfg.padded_vocab,
+            "max_len": max_len, "prefill": prefill, "decode": decode,
+            "engine": engine}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--archs", default=",".join(ARCHS))
+    ap.add_argument("--concurrency", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--reps", type=int, default=16)
+    args = ap.parse_args()
+
+    out = {"backend": jax.default_backend(),
+           "description": ("continuous-batching serving engine: prefill "
+                           "tokens/s, per-step decode latency (us) at full "
+                           "occupancy, end-to-end slot occupancy"),
+           "concurrency": args.concurrency,
+           "archs": {}}
+    for arch in args.archs.split(","):
+        print(f"[serve_bench] {arch} ...", flush=True)
+        out["archs"][arch] = bench_arch(
+            arch, concurrency=args.concurrency, prompt_len=args.prompt_len,
+            max_new=args.max_new, reps=args.reps)
+        e = out["archs"][arch]
+        print(f"  prefill {e['prefill']['tokens_per_s']:.0f} tok/s | "
+              f"decode {e['decode']['us_per_step_mean']:.0f} us/step "
+              f"(p50 {e['decode']['us_per_step_p50']:.0f}) | "
+              f"occupancy {e['engine']['slot_occupancy']:.2f}")
+
+    with open("BENCH_serve.json", "w") as f:
+        json.dump(out, f, indent=1)
+    print("wrote BENCH_serve.json")
+
+
+if __name__ == "__main__":
+    main()

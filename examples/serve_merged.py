@@ -1,8 +1,8 @@
 """Serve the merged model produced by decentralized training.
 
 Restores the single-model artifact written by train_decentralized.py
-(``--save-merged``) and runs batched prefill + decode through the serving
-engine.
+(``--save-merged``) and streams heterogeneous requests through the
+continuous-batching serving engine (4 decode slots, 8 requests).
 
 Run:  PYTHONPATH=src python examples/serve_merged.py [--restore path]
 """
@@ -16,8 +16,8 @@ ROOT = pathlib.Path(__file__).resolve().parents[1]
 
 def main():
     cmd = [sys.executable, "-m", "repro.launch.serve", "--arch", "olmo-1b",
-           "--preset", "cpu", "--batch", "4", "--prompt-len", "32",
-           "--max-new", "16"]
+           "--preset", "cpu", "--concurrency", "4", "--requests", "8",
+           "--prompt-len", "32", "--max-new", "16"]
     ckpt = ROOT / "results/merged_olmo.msgpack"
     if ckpt.exists() and "--restore" not in sys.argv:
         cmd += ["--restore", str(ckpt)]

@@ -132,7 +132,12 @@ class ModelConfig:
 
     @property
     def padded_vocab(self) -> int:
-        """Vocab padded to a multiple of 256 so it shards over 16-way model TP."""
+        """Vocab padded to a multiple of 256 so it shards over 16-way model TP.
+
+        Contract: the LM head projects to ``padded_vocab`` columns and the
+        padding tail carries random-init weights — anything that samples
+        from head logits MUST mask columns >= ``vocab_size`` to -inf first
+        (serving does this in ``repro.serving.engine.sample_token``)."""
         return ((self.vocab_size + 255) // 256) * 256
 
     def replace(self, **kw) -> "ModelConfig":

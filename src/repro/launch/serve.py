@@ -1,8 +1,13 @@
-"""Serve a (merged) model: batched prefill + decode.
+"""Serve a (merged) model through the continuous-batching engine.
 
-CPU demo: ``PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b
---preset cpu --batch 4 --prompt-len 32 --max-new 16`` — optionally restoring
-the artifact produced by ``launch.train --save-merged``.
+CPU demo — heterogeneous-length requests streaming through slotted decode:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --preset cpu \
+        --concurrency 4 --requests 8 --max-new 16 [--stream]
+
+optionally restoring the artifact produced by ``launch.train
+--save-merged`` via ``--restore``. ``--one-shot`` runs the plain static
+batched :func:`repro.serving.generate` path instead.
 """
 from __future__ import annotations
 
@@ -16,17 +21,44 @@ import numpy as np
 from repro.checkpoint import restore
 from repro.configs import get_config
 from repro.models import build_model
-from repro.serving import generate
+from repro.serving import Request, ServingEngine, generate
+
+
+def _request_inputs(cfg, i, S, k_prompt, k_mm, k_frames):
+    """Prompt + multimodal extras for demo request ``i`` (independent PRNG
+    streams, folded per request)."""
+    toks = jax.random.randint(jax.random.fold_in(k_prompt, i), (S,), 0,
+                              cfg.vocab_size)
+    extras = {}
+    if cfg.mm_prefix > 0:
+        extras["patch_embeds"] = jax.random.normal(
+            jax.random.fold_in(k_mm, i), (cfg.mm_prefix, cfg.d_model))
+    if cfg.encoder_layers:
+        extras["frame_embeds"] = jax.random.normal(
+            jax.random.fold_in(k_frames, i), (S, cfg.d_model))
+    return np.asarray(toks, np.int32), extras
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="olmo-1b")
     ap.add_argument("--preset", default="cpu", choices=["cpu", "pod"])
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--concurrency", type=int, default=4,
+                    help="decode slots held live at once")
+    ap.add_argument("--requests", type=int, default=8,
+                    help="demo requests fed through the engine")
+    ap.add_argument("--prompt-len", type=int, default=32,
+                    help="longest demo prompt (half of them use len//2)")
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=0,
+                    help="slot length; 0 = prompt+mm_prefix+max_new")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--eos-id", type=int, default=-1,
+                    help="stop token (>=0 enables early slot retirement)")
+    ap.add_argument("--stream", action="store_true",
+                    help="print tokens as slots emit them")
+    ap.add_argument("--one-shot", action="store_true",
+                    help="legacy path: one static generate() batch")
     ap.add_argument("--restore", default="")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -35,27 +67,61 @@ def main():
     if args.preset == "cpu":
         cfg = cfg.reduced(d_model=128, layers=2, vocab=256)
     model = build_model(cfg)
-    key = jax.random.PRNGKey(args.seed)
-    params = model.init_params(key)
+    # independent PRNG streams: params / prompts / patch embeds / frame
+    # embeds / sampling (the seed path used to reuse ONE key for all five)
+    k_params, k_prompt, k_mm, k_frames, k_sample = jax.random.split(
+        jax.random.PRNGKey(args.seed), 5)
+    params = model.init_params(k_params)
     if args.restore:
         params = restore(args.restore, params)
         print("restored", args.restore)
+    eos_id = args.eos_id if args.eos_id >= 0 else None
 
-    B, S = args.batch, args.prompt_len
-    batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
-    if cfg.mm_prefix > 0:
-        batch["patch_embeds"] = jax.random.normal(
-            key, (B, cfg.mm_prefix, cfg.d_model))
-    if cfg.encoder_layers:
-        batch["frame_embeds"] = jax.random.normal(key, (B, S, cfg.d_model))
+    if args.one_shot:
+        B, S = args.requests, args.prompt_len
+        batch = {"tokens": jnp.stack([jnp.asarray(_request_inputs(
+            cfg, i, S, k_prompt, k_mm, k_frames)[0]) for i in range(B)])}
+        if cfg.mm_prefix > 0:
+            batch["patch_embeds"] = jax.random.normal(
+                k_mm, (B, cfg.mm_prefix, cfg.d_model))
+        if cfg.encoder_layers:
+            batch["frame_embeds"] = jax.random.normal(
+                k_frames, (B, S, cfg.d_model))
+        t0 = time.time()
+        out = generate(model, params, batch, args.max_new,
+                       temperature=args.temperature, rng=k_sample,
+                       eos_id=eos_id)
+        dt = time.time() - t0
+        print(f"generated {out.shape} in {dt:.2f}s "
+              f"({B * args.max_new / dt:.1f} tok/s)")
+        print(out[:2])
+        return
 
+    # two prompt-length buckets -> exactly two prefill compiles
+    lengths = [args.prompt_len, max(1, args.prompt_len // 2)]
+    max_len = args.max_len or (args.prompt_len + max(0, cfg.mm_prefix)
+                               + args.max_new)
+    engine = ServingEngine(model, params, max_concurrency=args.concurrency,
+                           max_len=max_len, eos_id=eos_id,
+                           temperature=args.temperature, rng=k_sample)
+    reqs = []
+    for i in range(args.requests):
+        toks, extras = _request_inputs(cfg, i, lengths[i % len(lengths)],
+                                       k_prompt, k_mm, k_frames)
+        reqs.append(Request(rid=i, tokens=toks, max_new=args.max_new,
+                            extras=extras))
+    stream_cb = ((lambda rid, t: print(f"  req {rid}: {t}"))
+                 if args.stream else None)
     t0 = time.time()
-    out = generate(model, params, batch, args.max_new,
-                   temperature=args.temperature, rng=key)
+    out = engine.serve(reqs, stream=stream_cb)
     dt = time.time() - t0
-    print(f"generated {out.shape} in {dt:.2f}s "
-          f"({B * args.max_new / dt:.1f} tok/s)")
-    print(out[:2])
+    n_tok = sum(len(v) for v in out.values())
+    print(f"served {len(out)} requests / {n_tok} tokens in {dt:.2f}s "
+          f"({n_tok / dt:.1f} tok/s) | concurrency {args.concurrency} "
+          f"slot-occupancy {engine.occupancy:.2f} "
+          f"ticks {engine.stats['ticks']}")
+    for rid in sorted(out)[:2]:
+        print(f"req {rid}:", out[rid])
 
 
 if __name__ == "__main__":

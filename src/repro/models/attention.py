@@ -159,13 +159,18 @@ def gqa_forward(params, x, *, cfg: ModelConfig, lspec: LayerSpec,
     scale = 1.0 / np.sqrt(a.head_dim)
 
     if mode == "decode":
-        # single-step: S == 1; write (k,v) into the cache ring/linear buffer
+        # single-step: S == 1; write (k,v) into the cache ring/linear buffer.
+        # Each batch row writes at its OWN absolute position (``positions``
+        # is (B, 1)): under continuous batching every slot sits at a
+        # different depth, so the write is a per-row scatter, not a shared
+        # dynamic_update_slice.
         W = cache["k"].shape[1]
-        slot = jnp.mod(index, W)
-        ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
-        cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
-        cpos = jax.lax.dynamic_update_slice(
-            cache["pos"], jnp.full((B, 1), index, jnp.int32), (0, slot))
+        idx = positions[:, 0].astype(jnp.int32)  # (B,) absolute positions
+        slots = jnp.mod(idx, W)
+        rows = jnp.arange(B)
+        ck = cache["k"].at[rows, slots].set(k[:, 0])
+        cv = cache["v"].at[rows, slots].set(v[:, 0])
+        cpos = cache["pos"].at[rows, slots].set(idx)
         bias = _mask_bias(positions, cpos, causal=causal, window=lspec.window)
         y = _sdpa(q, ck, cv, bias, scale)
         new_cache = {"k": ck, "v": cv, "pos": cpos}
@@ -283,11 +288,12 @@ def mla_forward(params, x, *, cfg: ModelConfig, lspec: LayerSpec, positions,
 
     if mode == "decode":
         W = cache["ckv"].shape[1]
-        slot = jnp.mod(index, W)
-        cc = jax.lax.dynamic_update_slice(cache["ckv"], ckv, (0, slot, 0))
-        cr = jax.lax.dynamic_update_slice(cache["krope"], k_rope, (0, slot, 0))
-        cpos = jax.lax.dynamic_update_slice(
-            cache["pos"], jnp.full((B, 1), index, jnp.int32), (0, slot))
+        idx = positions[:, 0].astype(jnp.int32)  # (B,) per-slot positions
+        slots = jnp.mod(idx, W)
+        rows = jnp.arange(B)
+        cc = cache["ckv"].at[rows, slots].set(ckv[:, 0])
+        cr = cache["krope"].at[rows, slots].set(k_rope[:, 0])
+        cpos = cache["pos"].at[rows, slots].set(idx)
         bias = _mask_bias(positions, cpos, causal=True, window=lspec.window)
         # absorbed attention: scores in latent space
         q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope, wk)
@@ -357,12 +363,17 @@ spec_cross = spec_gqa
 
 
 def cross_kv(params, enc_out, *, cfg: ModelConfig):
-    """Project encoder output once; cached across decode steps."""
+    """Project encoder output once; cached across decode steps.
+
+    Carries a ``pos`` row (-1 = empty) so a cache row padded to a larger
+    encoder capacity (slotted serving: rows are spliced into a
+    max_len-sized buffer) keeps its padding masked out."""
     a = cfg.attn
     B, Se, _ = enc_out.shape
     k = (enc_out @ params["wk"]).reshape(B, Se, a.num_kv_heads, a.head_dim)
     v = (enc_out @ params["wv"]).reshape(B, Se, a.num_kv_heads, a.head_dim)
-    return {"k": k, "v": v}
+    pos = jnp.broadcast_to(jnp.arange(Se, dtype=jnp.int32), (B, Se))
+    return {"k": k, "v": v, "pos": pos}
 
 
 def cross_forward(params, x, kv, *, cfg: ModelConfig):
@@ -371,6 +382,11 @@ def cross_forward(params, x, kv, *, cfg: ModelConfig):
     B, S, _ = x.shape
     Se = kv["k"].shape[1]
     q = (x @ params["wq"]).reshape(B, S, a.num_heads, a.head_dim)
-    bias = jnp.zeros((B, S, Se), jnp.float32)
+    if "pos" in kv:  # mask padded encoder slots (pos == -1)
+        bias = jnp.where(kv["pos"][:, None, :] >= 0, 0.0, NEG_INF
+                         ).astype(jnp.float32)
+        bias = jnp.broadcast_to(bias, (B, S, Se))
+    else:
+        bias = jnp.zeros((B, S, Se), jnp.float32)
     y = _sdpa(q, kv["k"], kv["v"], bias, 1.0 / np.sqrt(a.head_dim))
     return y.reshape(B, S, a.q_dim) @ params["wo"]

@@ -185,10 +185,14 @@ def build_model(cfg: ModelConfig) -> Model:
         return logits, caches
 
     def decode_step(params, caches, tokens, index):
-        """tokens: (B, 1) int32; index: scalar int32 absolute position."""
+        """tokens: (B, 1) int32; index: absolute position(s) — a scalar
+        shared by the whole batch, or a (B,) vector when every row sits at
+        its own depth (continuous batching over slots)."""
         B = tokens.shape[0]
         x = embed_tokens(params["embed"], tokens, scale=cfg.embed_scale)
-        positions = jnp.full((B, 1), index, jnp.int32)
+        idx = jnp.asarray(index, jnp.int32)
+        positions = (idx.reshape(B, 1) if idx.ndim
+                     else jnp.full((B, 1), idx, jnp.int32))
         positions3 = None
         if cfg.attn.rope == "mrope":
             positions3 = jnp.broadcast_to(positions[None], (3, B, 1))

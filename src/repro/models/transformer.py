@@ -171,7 +171,8 @@ def init_block_cache(cfg: ModelConfig, lspec: LayerSpec, B: int, seq_len: int,
         a = cfg.attn
         c["cross"] = {
             "k": jnp.zeros((B, enc_len, a.num_kv_heads, a.head_dim), dtype),
-            "v": jnp.zeros((B, enc_len, a.num_kv_heads, a.head_dim), dtype)}
+            "v": jnp.zeros((B, enc_len, a.num_kv_heads, a.head_dim), dtype),
+            "pos": jnp.full((B, enc_len), -1, jnp.int32)}
     return c
 
 
@@ -189,7 +190,8 @@ def spec_block_cache(cfg: ModelConfig, lspec: LayerSpec, cross: bool):
         c["mixer"] = rec.spec_slstm_state()
     if cross:
         c["cross"] = {"k": L("data", None, "model", None),
-                      "v": L("data", None, "model", None)}
+                      "v": L("data", None, "model", None),
+                      "pos": L("data", None)}
     return c
 
 

@@ -1,1 +1,3 @@
-from repro.serving.engine import generate, make_decode_fn, make_prefill_fn  # noqa: F401
+from repro.serving.engine import (Request, ServingEngine,  # noqa: F401
+                                  generate, make_decode_fn, make_prefill_fn,
+                                  mask_oov, sample_token)

@@ -1,21 +1,49 @@
-"""Serving engine: batched generate, greedy determinism, merged-model flow."""
+"""Serving engine: OOV-safe sampling, donated caches, continuous batching
+(slot lifecycle, bit-exact parity with single-request generate), merged-model
+checkpoint round-trip."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.checkpoint import restore, save
 from repro.configs import get_config
 from repro.core import dsgd
 from repro.core.gossip import merged_model
 from repro.models import build_model
 from repro.optim import make_optimizer
-from repro.serving import generate
+from repro.serving import (Request, ServingEngine, generate, make_decode_fn,
+                           make_prefill_fn, mask_oov, sample_token)
+
+pytestmark = pytest.mark.serve
+
+
+def _tiny(arch="olmo-1b", d=64, vocab=64, **kw):
+    cfg = get_config(arch).reduced(d_model=d, vocab=vocab, **kw)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _prompt(i, S, vocab):
+    key = jax.random.fold_in(jax.random.PRNGKey(1), i)
+    return np.asarray(jax.random.randint(key, (S,), 0, vocab), np.int32)
+
+
+def _batch_of(req):
+    b = {"tokens": jnp.asarray(req.tokens[None])}
+    for k, v in req.extras.items():
+        b[k] = jnp.asarray(v)[None]
+    return b
+
+
+# ---------------------------------------------------------------------------
+# basic generate (pre-existing behavior)
+# ---------------------------------------------------------------------------
 
 
 def test_generate_shapes_and_determinism():
-    cfg = get_config("olmo-1b").reduced(d_model=128, vocab=128)
-    model = build_model(cfg)
-    params = model.init_params(jax.random.PRNGKey(0))
+    cfg, model, params = _tiny(d=128, vocab=128)
     batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (3, 16), 0,
                                           cfg.vocab_size)}
     out1 = generate(model, params, batch, 6)
@@ -23,13 +51,11 @@ def test_generate_shapes_and_determinism():
     assert out1.shape == (3, 6)
     np.testing.assert_array_equal(out1, out2)  # greedy is deterministic
     assert out1.dtype == np.int32
-    assert (out1 >= 0).all() and (out1 < cfg.padded_vocab).all()
+    assert (out1 >= 0).all() and (out1 < cfg.vocab_size).all()
 
 
 def test_generate_temperature_sampling_varies():
-    cfg = get_config("olmo-1b").reduced(d_model=128, vocab=128)
-    model = build_model(cfg)
-    params = model.init_params(jax.random.PRNGKey(0))
+    cfg, model, params = _tiny(d=128, vocab=128)
     batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
                                           cfg.vocab_size)}
     a = generate(model, params, batch, 8, temperature=2.0,
@@ -39,10 +65,223 @@ def test_generate_temperature_sampling_varies():
     assert not np.array_equal(a, b)
 
 
+def test_generate_vlm_with_prefix():
+    cfg, model, params = _tiny("qwen2-vl-72b", d=128, vocab=128)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                                          cfg.vocab_size),
+             "patch_embeds": jax.random.normal(jax.random.PRNGKey(2),
+                                               (2, cfg.mm_prefix,
+                                                cfg.d_model))}
+    out = generate(model, params, batch, 4)
+    assert out.shape == (2, 4)
+
+
+# ---------------------------------------------------------------------------
+# bugfix: sampling must never emit out-of-vocab (padded_vocab tail)
+# ---------------------------------------------------------------------------
+
+
+def test_sample_token_masks_padded_vocab_tail():
+    # craft logits whose maximum sits in the padding tail
+    logits = jnp.zeros((2, 16)).at[:, 13].set(100.0).at[0, 3].set(1.0)
+    tok = sample_token(logits, jax.random.PRNGKey(0), 0.0, vocab_size=10)
+    np.testing.assert_array_equal(np.asarray(tok), [3, 0])
+    for s in range(8):
+        tok = sample_token(logits, jax.random.PRNGKey(s), 1.0, vocab_size=10)
+        assert (np.asarray(tok) < 10).all()
+    # unmasked, the tail wins — the bug this guards against
+    assert (np.asarray(jnp.argmax(logits, -1)) == 13).all()
+    masked = mask_oov(logits, 10)
+    assert np.isneginf(np.asarray(masked)[:, 10:]).all()
+
+
+def test_generate_never_emits_oov_ids():
+    """padded_vocab (256) > vocab_size (250): the head's random-init padding
+    columns must never be sampled, greedy or tempered."""
+    cfg, model, params = _tiny(vocab=250)
+    assert cfg.padded_vocab > cfg.vocab_size
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (4, 8), 0,
+                                          cfg.vocab_size)}
+    greedy = generate(model, params, batch, 8)
+    temped = generate(model, params, batch, 8, temperature=1.5,
+                      rng=jax.random.PRNGKey(2))
+    assert (greedy < cfg.vocab_size).all() and (greedy >= 0).all()
+    assert (temped < cfg.vocab_size).all() and (temped >= 0).all()
+
+
+def test_engine_never_emits_oov_ids():
+    cfg, model, params = _tiny(vocab=250)
+    eng = ServingEngine(model, params, max_concurrency=2, max_len=24,
+                        temperature=1.5, rng=jax.random.PRNGKey(3))
+    reqs = [Request(rid=i, tokens=_prompt(i, 8, cfg.vocab_size), max_new=8)
+            for i in range(3)]
+    out = eng.serve(reqs)
+    for v in out.values():
+        assert (v < cfg.vocab_size).all() and (v >= 0).all()
+
+
+# ---------------------------------------------------------------------------
+# bugfix: donated caches — no per-step reallocation, no per-token host sync
+# ---------------------------------------------------------------------------
+
+
+def _leaf_ptrs(tree):
+    return sorted(x.unsafe_buffer_pointer()
+                  for x in jax.tree_util.tree_leaves(tree))
+
+
+def test_decode_fn_donates_cache_in_place():
+    cfg, model, params = _tiny()
+    prefill = make_prefill_fn(model, max_len=32)
+    logits, caches = prefill(params, {"tokens": jnp.asarray(
+        _prompt(0, 8, cfg.vocab_size)[None])})
+    decode = make_decode_fn(model)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    before = _leaf_ptrs(caches)
+    old_leaves = jax.tree_util.tree_leaves(caches)
+    _, new_caches = decode(params, caches, tok, jnp.asarray(8, jnp.int32))
+    # the donated input buffers are consumed...
+    assert all(x.is_deleted() for x in old_leaves)
+    # ...and the new cache aliases exactly the same device buffers
+    assert _leaf_ptrs(new_caches) == before
+
+
+def test_engine_cache_buffer_persists_across_ticks():
+    cfg, model, params = _tiny()
+    eng = ServingEngine(model, params, max_concurrency=2, max_len=32)
+    eng.submit(Request(rid=0, tokens=_prompt(0, 8, cfg.vocab_size),
+                       max_new=6))
+    eng.admit()
+    ptrs = _leaf_ptrs(eng.caches)
+    for _ in range(4):
+        eng.step()
+    assert _leaf_ptrs(eng.caches) == ptrs  # same buffers, every tick
+    # admission (insert) also updates the donated buffer in place
+    eng.submit(Request(rid=1, tokens=_prompt(1, 8, cfg.vocab_size),
+                       max_new=4))
+    eng.admit()
+    assert _leaf_ptrs(eng.caches) == ptrs
+
+
+# ---------------------------------------------------------------------------
+# continuous batching: parity, slot lifecycle, EOS, mixed batches
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch,kw", [
+    ("olmo-1b", {}),                      # GQA, tied embeddings
+    ("recurrentgemma-2b", {"layers": 3}),  # RG-LRU + local sliding window
+    ("seamless-m4t-medium", {}),          # enc-dec: padded cross-KV rows
+])
+def test_continuous_batching_bit_identical_to_sequential(arch, kw):
+    """N heterogeneous requests through the slotted engine produce
+    bit-identical tokens to N single-request generate calls (temp 0)."""
+    cfg, model, params = _tiny(arch, **kw)
+    max_len = 48
+    eng = ServingEngine(model, params, max_concurrency=3, max_len=max_len)
+    reqs = []
+    for i in range(5):
+        S = [8, 12][i % 2]
+        extras = {}
+        if cfg.encoder_layers:
+            extras["frame_embeds"] = np.asarray(jax.random.normal(
+                jax.random.fold_in(jax.random.PRNGKey(7), i),
+                (S, cfg.d_model)))
+        reqs.append(Request(rid=i, tokens=_prompt(i, S, cfg.vocab_size),
+                            max_new=4 + (i % 3), extras=extras))
+    out = eng.serve(reqs)
+    assert eng.stats["admitted"] == 5 and eng.stats["retired"] == 5
+    assert 0.0 < eng.occupancy <= 1.0
+    for r in reqs:
+        ref = generate(model, params, _batch_of(r), r.max_new,
+                       max_len=max_len)[0]
+        np.testing.assert_array_equal(out[r.rid], ref)
+
+
+def test_mixed_batch_multimodal_prefix_parity():
+    """VLM requests with and without a patch-embed prefix share slots."""
+    cfg, model, params = _tiny("qwen2-vl-72b")
+    max_len = 48
+    eng = ServingEngine(model, params, max_concurrency=3, max_len=max_len)
+    reqs = []
+    for i in range(4):
+        extras = {}
+        if i % 2 == 0:
+            extras["patch_embeds"] = np.asarray(jax.random.normal(
+                jax.random.fold_in(jax.random.PRNGKey(8), i),
+                (cfg.mm_prefix, cfg.d_model)))
+        reqs.append(Request(rid=i, tokens=_prompt(i, 8, cfg.vocab_size),
+                            max_new=5, extras=extras))
+    out = eng.serve(reqs)
+    for r in reqs:
+        ref = generate(model, params, _batch_of(r), r.max_new,
+                       max_len=max_len)[0]
+        np.testing.assert_array_equal(out[r.rid], ref)
+
+
+def test_slot_insert_evict_reuse():
+    cfg, model, params = _tiny()
+    eng = ServingEngine(model, params, max_concurrency=2, max_len=32)
+    r0 = Request(rid="a", tokens=_prompt(0, 8, cfg.vocab_size), max_new=12)
+    r1 = Request(rid="b", tokens=_prompt(1, 8, cfg.vocab_size), max_new=12)
+    eng.submit(r0)
+    eng.submit(r1)
+    eng.admit()
+    assert eng.free_slots() == [] and eng.live_slots() == [0, 1]
+    eng.step()
+    # evict slot 0 mid-flight: slot frees, survivor is unperturbed
+    eng.evict(0)
+    assert eng.free_slots() == [0]
+    out = eng.serve([])  # drain slot 1
+    ref1 = generate(model, params, _batch_of(r1), r1.max_new, max_len=32)[0]
+    np.testing.assert_array_equal(out["b"], ref1)
+    # the evicted slot is reusable and serves a fresh request correctly
+    r2 = Request(rid="c", tokens=_prompt(2, 8, cfg.vocab_size), max_new=6)
+    out = eng.serve([r2])
+    assert eng.stats["admitted"] == 3
+    ref2 = generate(model, params, _batch_of(r2), r2.max_new, max_len=32)[0]
+    np.testing.assert_array_equal(out["c"], ref2)
+
+
+def test_eos_retires_slot_and_stops_generate():
+    cfg, model, params = _tiny()
+    req = Request(rid=0, tokens=_prompt(0, 8, cfg.vocab_size), max_new=10)
+    free = generate(model, params, _batch_of(req), 10, max_len=32)[0]
+    eos = int(free[2])  # declare a token the model emits to be "EOS"
+    j = int(np.argmax(free == eos))  # first occurrence in the free run
+    # generate: rows stop at eos and the tail is eos-padded
+    out = generate(model, params, _batch_of(req), 10, max_len=32,
+                   eos_id=eos)[0]
+    np.testing.assert_array_equal(out[:j + 1], free[:j + 1])
+    assert (out[j:] == eos).all()
+    # engine: the slot retires at eos and the freed slot admits the queue
+    eng = ServingEngine(model, params, max_concurrency=1, max_len=32,
+                        eos_id=eos)
+    nxt = Request(rid=1, tokens=_prompt(1, 8, cfg.vocab_size), max_new=4)
+    served = eng.serve([req, nxt])
+    assert list(served[0]) == list(free[:j + 1])  # ends AT the eos token
+    assert served[0][-1] == eos
+    assert eng.stats["admitted"] == 2 and eng.stats["retired"] == 2
+    assert len(served[1]) == 4
+
+
+def test_engine_rejects_oversized_request():
+    cfg, model, params = _tiny()
+    eng = ServingEngine(model, params, max_concurrency=1, max_len=16)
+    eng.submit(Request(rid=0, tokens=_prompt(0, 12, cfg.vocab_size),
+                       max_new=8))
+    with pytest.raises(ValueError, match="max_len"):
+        eng.admit()
+
+
+# ---------------------------------------------------------------------------
+# the paper's pipeline: train -> single global merge -> save -> serve
+# ---------------------------------------------------------------------------
+
+
 def test_serve_the_merged_model_end_to_end():
     """Train decentralized -> merge -> serve: the paper's full pipeline."""
-    cfg = get_config("olmo-1b").reduced(d_model=64, vocab=64)
-    model = build_model(cfg)
+    cfg, model, params = _tiny(vocab=64)
     m = 2
     opt = make_optimizer("adamw", 1e-3)
     state = dsgd.init_state(model.init_params, opt, m, jax.random.PRNGKey(0))
@@ -60,14 +299,27 @@ def test_serve_the_merged_model_end_to_end():
     assert out.shape == (2, 4)
 
 
-def test_generate_vlm_with_prefix():
-    cfg = get_config("qwen2-vl-72b").reduced(d_model=128, vocab=128)
-    model = build_model(cfg)
-    params = model.init_params(jax.random.PRNGKey(0))
-    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
-                                          cfg.vocab_size),
-             "patch_embeds": jax.random.normal(jax.random.PRNGKey(2),
-                                               (2, cfg.mm_prefix,
-                                                cfg.d_model))}
-    out = generate(model, params, batch, 4)
-    assert out.shape == (2, 4)
+def test_merged_checkpoint_roundtrip_through_engine(tmp_path):
+    """--save-merged -> serve --restore: the checkpointed merged artifact
+    serves bit-identically to the in-memory merged model."""
+    cfg, model, params = _tiny(vocab=64)
+    m = 2
+    opt = make_optimizer("adamw", 1e-3)
+    state = dsgd.init_state(model.init_params, opt, m, jax.random.PRNGKey(0))
+    step = jax.jit(dsgd.make_dsgd_step(model.loss_fn, opt))
+    key = jax.random.PRNGKey(1)
+    batch = {"tokens": jax.random.randint(key, (m, 2, 16), 0, 64),
+             "targets": jax.random.randint(key, (m, 2, 16), 0, 64),
+             "mask": jnp.ones((m, 2, 16), jnp.float32)}
+    state, _ = step(state, batch, jnp.full((m, m), 0.5, jnp.float32), key)
+    merged = merged_model(state["params"])
+    path = str(tmp_path / "merged.msgpack")
+    save(path, merged)
+    # restore into a DIFFERENT init to prove the artifact carries the model
+    template = model.init_params(jax.random.PRNGKey(9))
+    restored = restore(path, template)
+    req = Request(rid=0, tokens=_prompt(0, 8, cfg.vocab_size), max_new=6)
+    eng = ServingEngine(model, restored, max_concurrency=2, max_len=32)
+    out = eng.serve([req])
+    ref = generate(model, merged, _batch_of(req), 6, max_len=32)[0]
+    np.testing.assert_array_equal(out[0], ref)
