@@ -43,6 +43,14 @@ byte-model inputs (k, density, idx_bytes, gamma) per dtype group; its
 per-round bytes model the sparse gossip rounds — the single global
 merge is deliberately the full-bandwidth round (see
 wire/codec.py:TopKCodec).
+
+``--telemetry`` benches the per-agent telemetry metric panels on the FULL
+segment driver (core/dsgd.make_panel_segment) at the cpu-preset size:
+``telemetry=False`` vs ``telemetry=True`` us_per_round (the latter adds
+the five (S, m) per-agent columns — loss, grad norm, distance-to-mean,
+liveness, codec wire bytes — to the single per-segment device_get),
+asserting the final panels stay BIT-identical (telemetry is pure reads)
+— merged into BENCH_panel.json under "telemetry".
 """
 from __future__ import annotations
 
@@ -361,6 +369,87 @@ def bench_wire(codecs, m=16, d_model=256, layers=8, vocab=512, rounds=8,
             "rounds": rounds, "codecs": out}
 
 
+def bench_telemetry(m=8, d_model=128, layers=2, vocab=256, rounds=8,
+                    local_steps=2, batch=4, seq=32, reps=3):
+    """Per-agent telemetry overhead on the full segment driver
+    (dsgd.make_panel_segment): the same donated scanned segment with
+    ``telemetry=False`` vs ``telemetry=True`` (which adds the five (S, m)
+    metric panels — per-agent loss / grad norm / distance-to-mean /
+    liveness trit / codec wire bytes — to the single per-segment
+    device_get). Asserts the no-perturbation invariant (final panels
+    BIT-identical) and records both runtimes + the extra metric payload
+    bytes per round. Merged into BENCH_panel.json["telemetry"]."""
+    from repro.configs import get_config
+    from repro.core import dsgd
+    from repro.data.synthetic import SyntheticLM, make_agent_lm_batches
+    from repro.models import build_model
+    from repro.optim import make_optimizer
+
+    cfg = get_config("olmo-1b").reduced(d_model=d_model, layers=layers,
+                                        vocab=vocab)
+    model = build_model(cfg)
+    opt = make_optimizer("adamw", 1e-2)
+
+    lm = SyntheticLM(vocab=cfg.vocab_size, num_domains=4, seed=0)
+    mixtures = lm.domain_mixtures(m, 0.5, seed=1)
+    rng_np = np.random.default_rng(2)
+    per_round = []
+    for _ in range(rounds):
+        hs = [make_agent_lm_batches(lm, mixtures, batch, seq, rng_np)
+              for _ in range(local_steps)]
+        per_round.append({k: np.stack([h[k] for h in hs]) for k in hs[0]})
+    batches = {k: jnp.asarray(np.stack([r[k] for r in per_round]))
+               for k in per_round[0]}
+    Ws = jnp.asarray(np.stack([
+        topology.random_matching(m, 0.5, np.random.default_rng(t))
+        for t in range(rounds)]), jnp.float32)
+    key = jax.random.PRNGKey(3)
+
+    def fresh():  # segment donates its state: rebuild per rep (same key)
+        state, spec = dsgd.init_panel_state(model.init_params, opt, m,
+                                            jax.random.PRNGKey(0))
+        jax.block_until_ready(jax.tree.leaves(state))
+        return state, spec
+
+    def run(seg_fn, state):
+        state, mets = seg_fn(state, batches, Ws, key)
+        mets = jax.device_get(mets)  # the segment's ONE transfer
+        jax.block_until_ready(jax.tree.leaves(state))
+        return state, mets
+
+    def clock(telemetry):
+        state, spec = fresh()
+        seg_fn = dsgd.make_panel_segment(model.loss_fn, opt, local_steps,
+                                         spec, telemetry=telemetry)
+        state, mets = run(seg_fn, state)  # compile
+        final = state
+        ts = []
+        for _ in range(reps):
+            state, _ = fresh()
+            t0 = time.perf_counter()
+            final, mets = run(seg_fn, state)
+            ts.append(time.perf_counter() - t0)
+        return min(ts) / rounds * 1e6, final, mets
+
+    us_off, pan_off, _ = clock(False)
+    us_on, pan_on, mets = clock(True)
+    for k, a in pan_off["panel"].items():  # no-perturbation invariant
+        assert np.array_equal(np.asarray(a),
+                              np.asarray(pan_on["panel"][k])), k
+    # the five per-agent columns: 3x f32 + 2x int32 per agent per round
+    extra = sorted(k for k in mets
+                   if k in ("loss_agent", "grad_norm_agent", "dist_to_mean",
+                            "live", "wire_bytes"))
+    return {"backend": jax.default_backend(), "m": m, "rounds": rounds,
+            "local_steps": local_steps,
+            "us_per_round_off": round(us_off, 1),
+            "us_per_round_on": round(us_on, 1),
+            "overhead_pct": round((us_on / us_off - 1.0) * 100, 1),
+            "agent_metrics": extra,
+            "extra_bytes_per_round": int(m * (3 * 4 + 2 * 4)),
+            "panels_bit_identical": True}
+
+
 def bench_checkpoint(m=16, d_model=256, layers=8, vocab=512, reps=3):
     """Checkpoint subsystem on the default-size panel train state
     (int8_ef residuals + fisher stats panels included): blob size,
@@ -430,6 +519,11 @@ def main():
                          "(payload + total) + runtime + final-merge "
                          "parity. A codec name, a comma-separated list "
                          "('int8,int4,topk'), or 'all'")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="bench the per-agent telemetry metric panels on "
+                         "the full segment driver: telemetry off vs on "
+                         "us_per_round, overhead pct, and the bit-"
+                         "identical-panels invariant")
     ap.add_argument("--checkpoint", action="store_true",
                     help="bench the checkpoint subsystem on the default-"
                          "size train state: blob bytes, save/restore wall "
@@ -478,6 +572,14 @@ def main():
         print(f"sharded: replicated={r['us_per_round_replicated']:.0f}us "
               f"fsdp-sharded={r['us_per_round_sharded']:.0f}us "
               f"coll={r['coll_bytes_per_round']}B/round", flush=True)
+    if args.telemetry:
+        out["telemetry"] = bench_telemetry()
+        r = out["telemetry"]
+        print(f"telemetry: off={r['us_per_round_off']:.0f}us "
+              f"on={r['us_per_round_on']:.0f}us "
+              f"overhead={r['overhead_pct']}% "
+              f"(+{r['extra_bytes_per_round']}B/round host readback)",
+              flush=True)
     if args.checkpoint:
         out["checkpoint"] = bench_checkpoint(
             **{k: v for k, v in SIZES["default"].items() if k != "rounds"})
@@ -487,7 +589,8 @@ def main():
               f"restore={r['restore_s'] * 1e3:.0f}ms "
               f"async_handoff={r['async_handoff_s'] * 1e3:.0f}ms",
               flush=True)
-    if not args.wire and not args.sharded and not args.checkpoint:
+    if (not args.wire and not args.sharded and not args.checkpoint
+            and not args.telemetry):
         # default: the sizes sweep
         out["backend"] = jax.default_backend()  # labels the "sizes" runs
         out.setdefault("sizes", {})

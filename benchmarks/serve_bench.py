@@ -6,14 +6,16 @@ sections per arch:
 
 * **prefill** — tokens/s through the jitted exact-length prefill (the
   engine's admission path), post-compile, at the demo prompt length;
-* **decode** — wall-clock per ``ServingEngine.step()`` at FULL slot
+* **decode** — per ``ServingEngine.step()`` latency at FULL slot
   occupancy (every slot live, one (C,) token fetch per tick — the fetch is
   the tick's only host sync, so the timing includes the whole jitted
-  decode+sample dispatch): mean / p50 / p90 microseconds, and the derived
-  decode tokens/s (C tokens per step);
+  decode+sample dispatch): mean / p50 / p90 microseconds read from the
+  engine's OWN ``decode_step_s`` histogram (telemetry.latency) after a
+  post-compile ``reset()``, and the derived decode tokens/s;
 * **engine** — an end-to-end heterogeneous serve run (2 prompt-length
   buckets, staggered max_new): requests/s, tokens/s, slot-occupancy
-  (live-slot-steps over capacity-steps) and scheduler stats.
+  (live-slot-steps over capacity-steps), scheduler stats, and the
+  engine's TTFT / queue-wait / per-token latency histogram summaries.
 
 CI runs this on the cpu-preset reduced configs and uploads the JSON as an
 artifact next to BENCH_panel.json; the committed copy is the reference.
@@ -81,31 +83,31 @@ def bench_arch(arch, *, concurrency=4, prompt_len=32, max_new=16, reps=16):
                "us_per_prefill": round(prefill_us, 1),
                "tokens_per_s": round(n_prefill_tok / (prefill_us / 1e6), 1)}
 
-    # -- per-step decode latency at FULL occupancy
+    # -- per-step decode latency at FULL occupancy, measured by the
+    # engine's OWN decode_step_s histogram (telemetry.latency): the
+    # compile tick is discarded by reset(), so the summary covers only
+    # post-compile steps
     fill = _requests(cfg, concurrency, [prompt_len], [long_new])
     for r in fill:
         eng.submit(r)
     eng.admit()
     assert len(eng.live_slots()) == concurrency
     eng.step()  # compile the slotted decode step
-    lat = []
+    eng.reset()  # drop warmup/compile from the histograms
     for _ in range(reps):
-        t0 = time.perf_counter()
         eng.step()  # blocks on the (C,) token fetch — full step latency
-        lat.append((time.perf_counter() - t0) * 1e6)
-    lat = np.asarray(lat)
+    lat = eng.hists["decode_step_s"].summary_us()
     decode = {"slots": concurrency,
-              "us_per_step_mean": round(float(lat.mean()), 1),
-              "us_per_step_p50": round(float(np.percentile(lat, 50)), 1),
-              "us_per_step_p90": round(float(np.percentile(lat, 90)), 1),
+              "us_per_step_mean": round(lat["mean_us"], 1),
+              "us_per_step_p50": round(lat["p50_us"], 1),
+              "us_per_step_p90": round(lat["p90_us"], 1),
               "decode_tokens_per_s": round(
-                  concurrency / (float(lat.mean()) / 1e6), 1)}
+                  concurrency / (lat["mean_us"] / 1e6), 1)}
     for s in eng.live_slots():
         eng.evict(s)
 
-    # -- end-to-end heterogeneous serve (fresh stats)
-    eng.stats.update(ticks=0, live_slot_ticks=0, admitted=0, retired=0,
-                     prefill_tokens=0)
+    # -- end-to-end heterogeneous serve (reset: fresh stats + histograms)
+    eng.reset()
     reqs = _requests(cfg, 2 * concurrency,
                      [prompt_len, max(1, prompt_len // 2)],
                      [max_new, max(1, max_new // 2), max_new - 2], seed=2)
@@ -113,13 +115,20 @@ def bench_arch(arch, *, concurrency=4, prompt_len=32, max_new=16, reps=16):
     served = eng.serve(reqs)
     dt = time.perf_counter() - t0
     n_tok = sum(len(v) for v in served.values())
+    snap = eng.snapshot()
     engine = {"requests": len(served), "tokens": n_tok,
               "seconds": round(dt, 2),
               "tokens_per_s": round(n_tok / dt, 1),
               "requests_per_s": round(len(served) / dt, 1),
-              "slot_occupancy": round(eng.occupancy, 3),
-              "ticks": eng.stats["ticks"],
-              "prefill_tokens": eng.stats["prefill_tokens"]}
+              "slot_occupancy": round(snap["occupancy"], 3),
+              "ticks": snap["ticks"],
+              "prefill_tokens": snap["prefill_tokens"],
+              # request-level latency histograms from the engine's own
+              # counters (fixed log-spaced buckets, microsecond summaries)
+              "latency_us": {k: {kk: round(vv, 1) for kk, vv in
+                                 eng.hists[k].summary_us().items()}
+                             for k in ("ttft_s", "queue_wait_s",
+                                       "per_token_s", "decode_step_s")}}
 
     return {"d_model": cfg.d_model, "layers": cfg.num_layers,
             "vocab": cfg.vocab_size, "padded_vocab": cfg.padded_vocab,
@@ -148,10 +157,13 @@ def main():
             arch, concurrency=args.concurrency, prompt_len=args.prompt_len,
             max_new=args.max_new, reps=args.reps)
         e = out["archs"][arch]
+        lat = e["engine"]["latency_us"]
         print(f"  prefill {e['prefill']['tokens_per_s']:.0f} tok/s | "
               f"decode {e['decode']['us_per_step_mean']:.0f} us/step "
               f"(p50 {e['decode']['us_per_step_p50']:.0f}) | "
-              f"occupancy {e['engine']['slot_occupancy']:.2f}")
+              f"occupancy {e['engine']['slot_occupancy']:.2f} | "
+              f"ttft p50 {lat['ttft_s']['p50_us']:.0f} us | per-token "
+              f"p50 {lat['per_token_s']['p50_us']:.0f} us")
 
     with open("BENCH_serve.json", "w") as f:
         json.dump(out, f, indent=1)

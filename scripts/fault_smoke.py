@@ -16,6 +16,14 @@ grad norm, merged/local evals, comm cost) must equal the baseline's
 BIT-EXACTLY — resume restores the panel state, both host rng streams
 and the schedule rng, so the trajectories are the same floats.
 
+All three runs also emit the telemetry event stream (``--telemetry
+--events``, per-agent metrics included): the interrupted and resumed
+runs share ONE events path — resume truncates it back to the
+checkpointed seq and re-emits the replayed rounds — and the final file
+must be BYTE-identical to the baseline's (wall-clock timing lives in the
+``.wall.jsonl`` sidecar, never in the deterministic stream). Both
+streams are schema-validated (repro.telemetry.validate).
+
 Prints a one-line JSON verdict on the last stdout line; exit 0 iff ok.
 """
 from __future__ import annotations
@@ -31,7 +39,7 @@ import sys
 CFG = ["--rounds", "6", "--segment", "2", "--agents", "4",
        "--local-steps", "2", "--batch", "4", "--seq", "32",
        "--wire", "int8_ef", "--merge", "fisher",
-       "--schedule", "final_merge", "--seed", "0"]
+       "--schedule", "final_merge", "--seed", "0", "--telemetry"]
 TAG = "olmo-1b_final_merge_a0.1_mfisher.json"
 
 
@@ -56,16 +64,21 @@ def main():
     base = os.path.join(args.workdir, "baseline")
     intr = os.path.join(args.workdir, "interrupted")
     shutil.rmtree(args.workdir, ignore_errors=True)
+    ev_base = os.path.join(base, "events.jsonl")
+    # interrupted + resumed share ONE stream: resume truncates it back to
+    # the checkpointed seq and re-emits the replayed rounds exactly once
+    ev_intr = os.path.join(intr, "events.jsonl")
 
-    run(base, [])
+    run(base, ["--events", ev_base])
     # the interrupted run dies by SIGKILL between segments — a real
     # crash, not a clean shutdown; only the flushed checkpoint survives
-    run(intr, ["--checkpoint-every", "1", "--die-after-segments", "1"],
-        expect_rc=-signal.SIGKILL)
+    run(intr, ["--checkpoint-every", "1", "--die-after-segments", "1",
+               "--events", ev_intr], expect_rc=-signal.SIGKILL)
     manifest = os.path.join(intr, "ckpt_" + TAG[:-5], "MANIFEST.json")
     if not os.path.exists(manifest):
         raise SystemExit(f"no checkpoint manifest at {manifest}")
-    resumed = run(intr, ["--checkpoint-every", "1", "--resume"])
+    resumed = run(intr, ["--checkpoint-every", "1", "--resume",
+                         "--events", ev_intr])
     if "resumed from checkpoint" not in resumed.stdout:
         raise SystemExit("resumed run did not restore a checkpoint")
 
@@ -75,9 +88,31 @@ def main():
         hr = json.load(f)["history"]
     ok = hb == hr
     diff = [r for r, (a, b) in enumerate(zip(hb, hr)) if a != b]
+
+    # the deterministic event stream must survive the kill+resume cycle
+    # byte-for-byte, and both copies must be schema-valid
+    with open(ev_base, "rb") as f:
+        eb = f.read()
+    with open(ev_intr, "rb") as f:
+        er = f.read()
+    events_ok = eb == er and len(eb) > 0
+    validate = subprocess.run(
+        [sys.executable, "-m", "repro.telemetry.validate", ev_base,
+         ev_intr],
+        env={**os.environ, "PYTHONPATH": os.environ.get("PYTHONPATH",
+                                                        "src")},
+        capture_output=True, text=True)
+    events_valid = validate.returncode == 0
+    if not events_valid:
+        sys.stderr.write(validate.stdout + validate.stderr)
+
+    ok = ok and events_ok and events_valid
     print(json.dumps({"ok": ok, "rounds": len(hb),
                       "final_merged_eval": hb[-1]["merged_eval"],
                       "diff_rounds": diff,
+                      "events_ok": events_ok,
+                      "events_valid": events_valid,
+                      "events_bytes": len(eb),
                       "manifest": manifest}))
     raise SystemExit(0 if ok else 1)
 

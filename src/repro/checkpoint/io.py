@@ -30,6 +30,7 @@ import json
 import os
 import re
 import threading
+import time
 import warnings
 import zlib
 
@@ -194,15 +195,23 @@ class Checkpointer:
     the live buffers) and packs/writes on a background thread; the next
     ``save``/``wait``/``restore_latest`` joins it and re-raises any
     stored error.
+
+    ``events`` may be set to a :class:`repro.telemetry.EventLog`; saves
+    then record operational ``checkpoint_save`` lines (step, bytes, wall
+    time) in its wall-clock SIDECAR — never the deterministic stream,
+    whose byte-identity across baseline/resumed runs checkpointing must
+    not break.
     """
 
-    def __init__(self, directory: str, keep: int = 3, fingerprint=None):
+    def __init__(self, directory: str, keep: int = 3, fingerprint=None,
+                 events=None):
         self.directory = os.path.abspath(directory)
         os.makedirs(self.directory, exist_ok=True)
         self.keep = int(keep)
         if self.keep < 1:
             raise ValueError(f"keep must be >= 1, got {keep}")
         self.fingerprint = fingerprint
+        self.events = events
         self._thread = None
         self._error = None
         self._manifest = self._load_manifest()
@@ -250,9 +259,14 @@ class Checkpointer:
             self._error = exc
 
     def _commit(self, step, flat, meta):
+        t0 = time.perf_counter()
         blob, crc = _pack_blob(flat, meta)
         fname = f"step_{step:08d}.ckpt"
         _atomic_write(os.path.join(self.directory, fname), blob)
+        if self.events is not None:  # sidecar-only (emit_op is thread-safe)
+            self.events.emit_op("checkpoint_save", step=int(step),
+                                bytes=len(blob),
+                                dt=time.perf_counter() - t0)
         ckpts = [c for c in self._manifest["checkpoints"]
                  if c["step"] != step]
         ckpts.append({"step": step, "file": fname, "bytes": len(blob),

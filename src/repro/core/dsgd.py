@@ -38,6 +38,8 @@ from repro.core import gossip
 from repro.core import panel as panel_mod
 from repro.core.consensus import consensus_distance_tree
 from repro.optim.optim import Optimizer
+from repro.telemetry import metrics as tmetrics
+from repro.telemetry.trace import scope
 
 
 def _init_agent_params(init_params: Callable, m: int, rng,
@@ -203,7 +205,11 @@ def make_dsgd_round(loss_fn: Callable, optimizer: Optimizer, local_steps: int,
             body, (state["params"], state["opt"]), (batches, rngs))
         mixed = _mix(p, W, gossip_impl, wire_dtype, wire,
                      _wire_key(rng, needs_key))
-        metrics = {"loss": jnp.mean(losses), "grad_norm": gns[-1]}
+        # mean AND max over the round's H local steps: reporting gns[-1]
+        # alone silently dropped a gradient spike at any earlier local
+        # step (tests/test_telemetry.py pins the regression)
+        metrics = {"loss": jnp.mean(losses), "grad_norm": jnp.mean(gns),
+                   "grad_norm_max": jnp.max(gns)}
         if monitor:
             metrics["consensus"] = consensus_distance_tree(mixed)
         return {"params": mixed, "opt": o,
@@ -357,7 +363,8 @@ def unpanelize_state(state, spec):
 
 def make_panel_segment(loss_fn: Callable, optimizer: Optimizer,
                        local_steps: int, spec, *, wire_dtype=None,
-                       monitor: bool = True, use_pallas: bool = False,
+                       monitor: bool = True, telemetry: bool = False,
+                       use_pallas: bool = False,
                        interpret: bool = True, donate: bool = True,
                        param_shardings=None, in_shardings=None):
     """Donated, scanned panel driver: one dispatch per SCHEDULE SEGMENT.
@@ -373,6 +380,30 @@ def make_panel_segment(loss_fn: Callable, optimizer: Optimizer,
       live (S, m) int or None           — per-round per-agent liveness
                                           (see Liveness below),
       metrics dict of (S,) arrays      — one device_get per segment.
+
+    **Metrics.** ``loss`` and ``grad_norm``/``grad_norm_max`` are the
+    per-round mean/max over the H local steps (the old driver reported
+    only the FINAL local step's grad norm, hiding any earlier spike);
+    ``monitor=True`` adds the consensus ``Xi``. ``telemetry=True``
+    extends the scalars to per-agent (S, m) METRIC PANELS — stacked by
+    the same scan, still one device_get per segment:
+
+      loss_agent      (S, m) f32 — per-agent mean loss over the round,
+      grad_norm_agent (S, m) f32 — per-agent mean grad l2 norm,
+      dist_to_mean    (S, m) f32 — per-agent distance to the (live)
+                                   panel mean after the mix: the
+                                   consensus decomposition
+                                   (Xi == sqrt(live-mean(dist**2))),
+      live            (S, m) i32 — the round's DEAD/LIVE/RESYNC trits,
+      wire_bytes      (S, m) i32 — exact codec wire bytes each agent
+                                   paid (PanelSpec.wire_total_bytes
+                                   model; idle rows 0, a delta codec's
+                                   global round and RESYNC pulls at
+                                   full-precision cost).
+
+    All telemetry values are pure reads of arrays the round already
+    materialized — the trajectory is bit-identical with telemetry on or
+    off (pinned by tests/test_telemetry.py).
 
     ``jax.lax.scan`` runs the S rounds (each an inner scan over the H
     local steps) entirely on device; ``donate_argnums=(0,)`` lets XLA
@@ -468,9 +499,14 @@ def make_panel_segment(loss_fn: Callable, optimizer: Optimizer,
     # merging.merge_panel even for the uniform operator: the one-shot
     # merge is its full-bandwidth round (panel.global_merge delta rule)
     # and cannot stay inside the sparse damped fused matmul
-    plain_merge = (merger.name == "uniform"
-                   and not (wire_dtype is None and _wire_has_delta(spec)))
+    has_delta = wire_dtype is None and _wire_has_delta(spec)
+    plain_merge = merger.name == "uniform" and not has_delta
     needs_stats = bool(merger.stat_panels)
+    if telemetry:
+        # host constants of the exact codec cost model, baked into the
+        # traced wire_bytes column
+        t_bytes_wire, t_bytes_full = tmetrics.wire_bytes_model(
+            spec, wire_dtype)
 
     def one(p, b, r):
         (l, aux), g = jax.value_and_grad(loss_fn, has_aux=True)(p, b, r)
@@ -495,6 +531,21 @@ def make_panel_segment(loss_fn: Callable, optimizer: Optimizer,
             """(m,) bool mask broadcast against a leading-(m,) leaf."""
             return mask.reshape((m,) + (1,) * (a.ndim - 1))
 
+        def agent_mets(out_pan, la, ga, lv, alive, W, full_bw):
+            # the per-agent metric panel: pure reads of arrays the round
+            # already materialized (la/ga are (H, m) stacks from the
+            # local scan; out_pan is the post-mix panel)
+            return {
+                "loss_agent": jnp.mean(la, axis=0),
+                "grad_norm_agent": jnp.mean(ga, axis=0),
+                "dist_to_mean": tmetrics.agent_dist_to_mean(
+                    out_pan, live=alive),
+                "live": tmetrics.live_trits(lv, m),
+                "wire_bytes": tmetrics.round_wire_bytes(
+                    W, bytes_wire=t_bytes_wire, bytes_full=t_bytes_full,
+                    full_bandwidth=full_bw, lv=lv),
+            }
+
         def make_local_body(alive):
             # alive=None compiles the exact pre-liveness body; a (m,)
             # bool mask keeps non-live rows' params/moments/stats frozen
@@ -515,13 +566,15 @@ def make_panel_segment(loss_fn: Callable, optimizer: Optimizer,
                 rngs = jax.random.split(r, m)
                 params = panel_mod.from_panel(
                     pan, spec, leaf_shardings=param_shardings)
-                grads, losses = jax.vmap(one)(params, batch, rngs)
+                with scope("dsgd.local_grad"):
+                    grads, losses = jax.vmap(one)(params, batch, rngs)
                 gpan = panel_mod.to_panel(grads, spec)
                 if not plain_merge and merger.local_stat:
                     upd = merger.update_local(mstat, gpan)
                     mstat = upd if alive is None else freeze(upd, mstat)
-                new_pan, new_opt = jax.vmap(optimizer.update)(
-                    gpan, opt, pan)
+                with scope("dsgd.local_update"):
+                    new_pan, new_opt = jax.vmap(optimizer.update)(
+                        gpan, opt, pan)
                 if alive is None:
                     loss = jnp.mean(losses)
                     gn = panel_mod.panel_norm(gpan, axis_mean=True)
@@ -531,12 +584,16 @@ def make_panel_segment(loss_fn: Callable, optimizer: Optimizer,
                     loss = jnp.sum(lf * losses) / n_live
                     gn = panel_mod.panel_norm(gpan, axis_mean=True,
                                               rows=lf / n_live)
-                return (new_pan, new_opt, mstat), (loss, gn)
+                ys = (loss, gn)
+                if telemetry:
+                    ys = ys + (tmetrics.agent_loss(losses, alive),
+                               tmetrics.agent_grad_norm(gpan, alive))
+                return (new_pan, new_opt, mstat), ys
 
             return local_body
 
         def _live_comm(pan, opt, werr, mstat, W, wkey, lv, alive, glob,
-                       losses, gns):
+                       losses, gns, la=None, ga=None):
             # elastic round: mix over the (already degraded) W, then
             # apply the liveness mask — DEAD rows pass through, RESYNC
             # rows pull the live agents' post-mix mean and restart their
@@ -618,19 +675,28 @@ def make_panel_segment(loss_fn: Callable, optimizer: Optimizer,
                         jnp.where(row_mask(sync, v), fresh[name][k], v),
                         spec, k) for k, v in grp.items()}
                     for name, grp in mstat.items()}
-            mets = {"loss": jnp.mean(losses), "grad_norm": gns[-1]}
+            mets = {"loss": jnp.mean(losses), "grad_norm": jnp.mean(gns),
+                    "grad_norm_max": jnp.max(gns)}
             if monitor:
                 mets["consensus"] = panel_mod.consensus_distance(
                     out_pan, use_pallas=use_pallas, interpret=interpret,
                     spec=spec, live=alive)
+            if telemetry:
+                mets.update(agent_mets(
+                    out_pan, la, ga, lv, alive, W,
+                    is_full if has_delta else None))
             return (out_pan, opt, werr_m, mstat), mets
 
         def run_round(carry, W, batch_r, r, glob, lv):
             pan, opt, werr, mstat = carry
             alive = None if lv is None else lv == 1
             rs = jax.random.split(r, local_steps)
-            (pan, opt, mstat), (losses, gns) = jax.lax.scan(
+            (pan, opt, mstat), step_ys = jax.lax.scan(
                 make_local_body(alive), (pan, opt, mstat), (batch_r, rs))
+            if telemetry:
+                losses, gns, la, ga = step_ys
+            else:
+                (losses, gns), la, ga = step_ys, None, None
             if not plain_merge and merger.round_stat:
                 upd = merger.update_round(mstat, pan)
                 if alive is not None:
@@ -641,7 +707,7 @@ def make_panel_segment(loss_fn: Callable, optimizer: Optimizer,
             wkey = _wire_key(r, needs_key)
             if lv is not None:
                 return _live_comm(pan, opt, werr, mstat, W, wkey, lv,
-                                  alive, glob, losses, gns)
+                                  alive, glob, losses, gns, la, ga)
             # W == I rounds communicate nothing: skip the matmul AND the
             # codec (no payload travels, so nothing may be quantized and
             # the error-feedback residual must pass through untouched)
@@ -688,8 +754,9 @@ def make_panel_segment(loss_fn: Callable, optimizer: Optimizer,
                 else:
                     mixed, werr, xi = jax.lax.cond(
                         is_full, merge_fn, gossip_fn, (pan, werr))
-                mets = {"loss": jnp.mean(losses), "grad_norm": gns[-1],
-                        "consensus": xi}
+                mets = {"loss": jnp.mean(losses),
+                        "grad_norm": jnp.mean(gns),
+                        "grad_norm_max": jnp.max(gns), "consensus": xi}
             else:
                 def comm(args):
                     p, e = args
@@ -714,7 +781,13 @@ def make_panel_segment(loss_fn: Callable, optimizer: Optimizer,
                 else:
                     mixed, werr = jax.lax.cond(
                         is_full, merge_fn, gossip_fn, (pan, werr))
-                mets = {"loss": jnp.mean(losses), "grad_norm": gns[-1]}
+                mets = {"loss": jnp.mean(losses),
+                        "grad_norm": jnp.mean(gns),
+                        "grad_norm_max": jnp.max(gns)}
+            if telemetry:
+                mets.update(agent_mets(
+                    mixed, la, ga, lv, alive, W,
+                    is_full if has_delta else None))
             return (mixed, opt, werr, mstat), mets
 
         def round_body(carry, xs):

@@ -93,6 +93,18 @@ class FaultPlan:
         """(m,) bool — fully-participating (LIVE) agents at round ``t``."""
         return self.mask(t) == LIVE
 
+    def at(self, t: int) -> Tuple[Tuple[int, str], ...]:
+        """The plan's transitions AT round ``t``: (agent, 'kill'|'rejoin')
+        tuples in deterministic (agent, kill_at) order — the telemetry
+        event log's fault records."""
+        out = []
+        for e in self.events:
+            if e.kill_at == t:
+                out.append((e.agent, "kill"))
+            if e.rejoin_at is not None and e.rejoin_at == t:
+                out.append((e.agent, "rejoin"))
+        return tuple(out)
+
     # ------------------------------------------------------------- text
     @classmethod
     def parse(cls, m: int, spec: str) -> "FaultPlan":

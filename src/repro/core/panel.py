@@ -73,6 +73,7 @@ from jax.sharding import PartitionSpec as P
 from repro import wire as wire_mod
 from repro.kernels.gossip_mix import gossip_mix_panel
 from repro.kernels.panel_reduce import panel_mean_consensus
+from repro.telemetry.trace import scope
 
 
 @dataclass(frozen=True)
@@ -393,9 +394,10 @@ def _mix_dense_groups(panel, W, *, wire_dtype, use_pallas, block_d,
     new_err = {} if err is not None else None
     for k, x in panel.items():
         e = err[k] if err is not None else None
-        xw, back, ne = codecs[k].encode(x, key=keys[k], err=e,
-                                        use_pallas=pallas,
-                                        interpret=interpret)
+        with scope(f"wire.encode.{k}"):
+            xw, back, ne = codecs[k].encode(x, key=keys[k], err=e,
+                                            use_pallas=pallas,
+                                            interpret=interpret)
         if getattr(codecs[k], "delta_mix", False):
             # sparse-innovation codecs (topk): xw is the updated MIRROR
             # panel and the mix runs in CHOCO's damped delta form
@@ -419,7 +421,8 @@ def _mix_dense_groups(panel, W, *, wire_dtype, use_pallas, block_d,
                 d32 = Wd @ xw.astype(jnp.float32)
             gamma = getattr(codecs[k], "gamma", 1.0)
             y32 = x32 + gamma * d32.astype(jnp.float32)
-            yb = back(y32)
+            with scope(f"wire.decode.{k}"):
+                yb = back(y32)
             if with_mean:
                 mu = jnp.mean(y32, axis=0)
                 if not fold:
@@ -453,7 +456,8 @@ def _mix_dense_groups(panel, W, *, wire_dtype, use_pallas, block_d,
             y = y32.astype(xw.dtype)
         if fold and not fold_k:
             mu = jnp.mean(xw.astype(jnp.float32), axis=0)
-        yb = back(y)
+        with scope(f"wire.decode.{k}"):
+            yb = back(y)
         if idle_rows is not None:
             yb = jnp.where(idle_rows, x, yb)
             if e is not None:
@@ -470,6 +474,7 @@ def _mix_dense_groups(panel, W, *, wire_dtype, use_pallas, block_d,
     return mixed, means, new_err
 
 
+@scope("panel.mix")
 def mix_dense(panel, W, *, wire_dtype=None, use_pallas: bool = False,
               block_d: int = 512, interpret: bool = True,
               spec: Optional[PanelSpec] = None, key=None, err=None):
@@ -489,6 +494,7 @@ def mix_dense(panel, W, *, wire_dtype=None, use_pallas: bool = False,
     return mixed if err is None else (mixed, new_err)
 
 
+@scope("panel.mix_mean")
 def mix_dense_mean(panel, W, *, wire_dtype=None, use_pallas: bool = False,
                    block_d: int = 512, interpret: bool = True,
                    spec: Optional[PanelSpec] = None, key=None, err=None):
@@ -503,6 +509,7 @@ def mix_dense_mean(panel, W, *, wire_dtype=None, use_pallas: bool = False,
         with_mean=True)
 
 
+@scope("panel.mix_pairwise")
 def mix_pairwise(panel, partner, weight=0.5, *, wire_dtype=None,
                  spec: Optional[PanelSpec] = None, key=None, err=None):
     """theta_k <- (1-w) theta_k + w theta_{partner[k]}: one gather + lerp
@@ -541,6 +548,7 @@ def mix_pairwise(panel, partner, weight=0.5, *, wire_dtype=None,
                    for k, v in out.items()}
 
 
+@scope("panel.global_merge")
 def global_merge(panel, *, wire_dtype=None,
                  spec: Optional[PanelSpec] = None, key=None, err=None):
     """theta_k <- mean_l theta_l: one mean-reduce + broadcast per group.
@@ -585,6 +593,7 @@ def _live_weights(live, m):
     return lf / jnp.maximum(jnp.sum(lf), 1.0)
 
 
+@scope("panel.merged")
 def merged(panel, *, use_pallas: bool = False, block_d: int = 512,
            interpret: bool = True, spec: Optional[PanelSpec] = None,
            live=None):
@@ -614,6 +623,7 @@ def merged_tree(panel, spec: PanelSpec):
     return from_panel(merged(panel, spec=spec), spec, cast=False)
 
 
+@scope("panel.consensus")
 def consensus_distance(panel, *, use_pallas: bool = False,
                        block_d: int = 512, interpret: bool = True,
                        spec: Optional[PanelSpec] = None, live=None):
@@ -647,6 +657,7 @@ def consensus_distance(panel, *, use_pallas: bool = False,
     return jnp.sqrt(total / m)
 
 
+@scope("panel.consensus")
 def consensus_from_mean(panel, means):
     """Xi_t from a PRECOMPUTED column-mean panel ({group: (D_g,) f32},
     e.g. the folded row of :func:`mix_dense_mean`): one deviation pass,

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import telemetry
 from repro.checkpoint import restore
 from repro.configs import get_config
 from repro.models import build_model
@@ -61,6 +62,13 @@ def main():
                     help="legacy path: one static generate() batch")
     ap.add_argument("--restore", default="")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--events", default="",
+                    help="typed request-lifecycle JSONL event stream "
+                         "(submit/admit/retire + serve_start/serve_end), "
+                         "schema-validated at emit time")
+    ap.add_argument("--profile", default="",
+                    help="capture a jax profiler trace of the serving "
+                         "loop into this logdir")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -101,9 +109,17 @@ def main():
     lengths = [args.prompt_len, max(1, args.prompt_len // 2)]
     max_len = args.max_len or (args.prompt_len + max(0, cfg.mm_prefix)
                                + args.max_new)
+    serve_cfg = {k: vars(args)[k] for k in (
+        "arch", "preset", "concurrency", "requests", "prompt_len",
+        "max_new", "temperature", "eos_id", "seed")}
+    log = telemetry.EventLog(args.events or None,
+                             run_id=telemetry.make_run_id(serve_cfg))
+    log.emit("serve_start", run_id=log.run_id,
+             schema=telemetry.SCHEMA_VERSION, config=serve_cfg)
     engine = ServingEngine(model, params, max_concurrency=args.concurrency,
                            max_len=max_len, eos_id=eos_id,
-                           temperature=args.temperature, rng=k_sample)
+                           temperature=args.temperature, rng=k_sample,
+                           events=log)
     reqs = []
     for i in range(args.requests):
         toks, extras = _request_inputs(cfg, i, lengths[i % len(lengths)],
@@ -112,16 +128,30 @@ def main():
                             extras=extras))
     stream_cb = ((lambda rid, t: print(f"  req {rid}: {t}"))
                  if args.stream else None)
+    prof = telemetry.profile_trace(args.profile,
+                                   enabled=bool(args.profile)).start()
     t0 = time.time()
     out = engine.serve(reqs, stream=stream_cb)
     dt = time.time() - t0
+    prof.stop()
     n_tok = sum(len(v) for v in out.values())
-    print(f"served {len(out)} requests / {n_tok} tokens in {dt:.2f}s "
-          f"({n_tok / dt:.1f} tok/s) | concurrency {args.concurrency} "
-          f"slot-occupancy {engine.occupancy:.2f} "
-          f"ticks {engine.stats['ticks']}")
+    snap = engine.snapshot()
+    print(telemetry.format_event(log.emit(
+        "serve_end", requests=len(out), tokens=n_tok,
+        ticks=snap["ticks"], occupancy=snap["occupancy"])), flush=True)
+    lat = snap["latency"]
+    print(f"  {n_tok / dt:.1f} tok/s | "
+          f"ttft p50/p99 {lat['ttft_s']['p50_s'] * 1e3:.1f}/"
+          f"{lat['ttft_s']['p99_s'] * 1e3:.1f} ms | queue p50 "
+          f"{lat['queue_wait_s']['p50_s'] * 1e3:.1f} ms | decode step "
+          f"p50 {lat['decode_step_s']['p50_s'] * 1e3:.1f} ms | per-token "
+          f"p50 {lat['per_token_s']['p50_s'] * 1e3:.1f} ms")
+    log.emit_op("serve_latency", **{k: lat[k] for k in lat})
+    log.close()
     for rid in sorted(out)[:2]:
         print(f"req {rid}:", out[rid])
+    if args.events:
+        print(f"events: {args.events}")
 
 
 if __name__ == "__main__":

@@ -40,6 +40,7 @@ from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro import merging as merging_mod
+from repro import telemetry
 from repro import wire as wire_mod
 from repro.checkpoint import Checkpointer, save
 from repro.configs import get_config
@@ -174,6 +175,24 @@ def main():
                     help="fault-injection harness hook: SIGKILL the "
                          "process after N segments (checkpoints, if "
                          "enabled, are flushed first)")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="per-agent (S, m) metric panels from the segment "
+                         "scan (loss, grad norm, distance-to-mean, "
+                         "liveness, exact codec wire bytes) recorded on "
+                         "each round event; same single device_get per "
+                         "segment, bit-identical trajectory")
+    ap.add_argument("--events", default="",
+                    help="deterministic JSONL event stream path (+ a "
+                         ".wall.jsonl wall-clock sidecar); default "
+                         "OUT/events_<tag>.jsonl when --telemetry is on, "
+                         "else console-only. Resume-safe: the stream is "
+                         "truncated to the checkpointed seq so baseline "
+                         "and kill+resume runs emit byte-identical files")
+    ap.add_argument("--profile", default="",
+                    help="capture a jax profiler trace of the training "
+                         "loop into this logdir (view with tensorboard/"
+                         "xprof; degrades to a warning where the profiler "
+                         "backend is unavailable)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -220,16 +239,24 @@ def main():
     if args.merge != "uniform":
         tag += f"_m{args.merge}"
 
+    # the run configuration that DEFINES the trajectory (the checkpoint
+    # fingerprint keys): checkpoint/resume/telemetry plumbing is excluded
+    # so a baseline and its kill+resume twin share one run_id
+    run_cfg = {k: vars(args)[k] for k in (
+        "arch", "preset", "agents", "rounds", "local_steps", "batch",
+        "seq", "segment", "schedule", "window_start", "window_end",
+        "optimizer", "lr", "alpha", "wire", "merge",
+        "eval_merged_every", "seed", "faults")}
+    run_id = telemetry.make_run_id(run_cfg)
+    events_path = args.events or (
+        os.path.join(args.out, f"events_{tag}.jsonl")
+        if args.telemetry else None)
+
     ckpt = None
     if args.checkpoint_every or args.resume:
-        fingerprint = {k: vars(args)[k] for k in (
-            "arch", "preset", "agents", "rounds", "local_steps", "batch",
-            "seq", "segment", "schedule", "window_start", "window_end",
-            "optimizer", "lr", "alpha", "wire", "merge",
-            "eval_merged_every", "seed", "faults")}
         ckpt = Checkpointer(
             args.checkpoint_dir or os.path.join(args.out, "ckpt_" + tag),
-            keep=args.checkpoint_keep, fingerprint=fingerprint)
+            keep=args.checkpoint_keep, fingerprint=run_cfg)
 
     key = jax.random.PRNGKey(args.seed)
     state, spec = dsgd.init_panel_state(model.init_params, opt, m, key,
@@ -239,7 +266,8 @@ def main():
           f"payload ({spec.wire_total_bytes} B with scales/indices) per "
           f"full-panel exchange; merge operator {spec.merger}")
     segment_fn = dsgd.make_panel_segment(model.loss_fn, opt,
-                                         args.local_steps, spec)
+                                         args.local_steps, spec,
+                                         telemetry=args.telemetry)
 
     lm = SyntheticLM(vocab=cfg.vocab_size, num_domains=8, seed=args.seed)
     mixtures = lm.domain_mixtures(m, args.alpha, seed=args.seed + 1)
@@ -288,6 +316,7 @@ def main():
     comm_cost = 0.0
     t = 0
     seg_idx = 0
+    resume_seq = None
     if args.resume and ckpt is not None:
         rec = ckpt.restore_latest({"state": state, "key": key})
         if rec is None:
@@ -309,7 +338,29 @@ def main():
             history = meta["history"]
             rng_np.bit_generator.state = meta["data_rng"]
             sched.rng.bit_generator.state = meta["sched_rng"]
+            resume_seq = meta.get("events_seq")
             print(f"resumed from checkpoint step {step} (round {t})")
+
+    # the event log: deterministic stream (+ wall sidecar) when a path is
+    # set, console/validation-only otherwise. On resume the stream is
+    # truncated back to the checkpointed seq — replayed rounds are
+    # re-emitted exactly once, keeping baseline vs kill+resume streams
+    # byte-identical (scripts/fault_smoke.py pins this)
+    log = telemetry.EventLog(
+        events_path, run_id=run_id,
+        resume_at=resume_seq if events_path else None)
+    if resume_seq is None:
+        print(telemetry.format_event(log.emit(
+            "run_start", run_id=run_id, schema=telemetry.SCHEMA_VERSION,
+            config=run_cfg)), flush=True)
+    else:
+        log.emit_op("resume", round=t, segments=seg_idx, seq=log.seq)
+    if ckpt is not None:
+        ckpt.events = log  # sidecar checkpoint_save records
+    prof = telemetry.profile_trace(args.profile,
+                                   enabled=bool(args.profile)).start()
+    if prof:
+        log.emit_op("profile_start", logdir=args.profile)
     t0 = time.time()
     ev = args.eval_merged_every
     while t < args.rounds:
@@ -331,6 +382,7 @@ def main():
             glob.append(sched.last_kind == "global")
             lives.append(sched.last_live if sched.last_live is not None
                          else np.ones(m, np.int8))
+        glob_host = list(glob)
         Ws += [np.eye(m)] * pad
         glob += [False] * pad
         lives += [np.ones(m, np.int8)] * pad
@@ -349,6 +401,7 @@ def main():
                        for k, v in batches.items()}
         active = jnp.asarray([True] * S + [False] * pad)
         key, k = jax.random.split(key)
+        seg_t0 = time.perf_counter()
         state, mets = segment_fn(state, batches, Ws, k, active, glob, live)
         mets = jax.device_get(mets)  # ONE transfer for the whole segment
         mets = {k: v[:S] for k, v in mets.items()}
@@ -365,11 +418,27 @@ def main():
                                          eval_batch, lv_now))
             local_l = float(eval_local(state["panel"], eval_batch,
                                        lv_now))
+        rev = None
         for s in range(S):
+            r = t + s
+            if plan is not None:
+                for agent, kind in plan.at(r):
+                    log.emit("fault", round=r, agent=agent, kind=kind)
+            extra = ({k: mets[k][s] for k in
+                      ("loss_agent", "grad_norm_agent", "dist_to_mean",
+                       "live", "wire_bytes")} if args.telemetry else {})
+            rev = log.emit(
+                "round", round=r, loss=float(mets["loss"][s]),
+                grad_norm=float(mets["grad_norm"][s]),
+                grad_norm_max=float(mets["grad_norm_max"][s]),
+                consensus=float(mets["consensus"][s]),
+                comm_cost_P=float(comm_after[s]), **extra)
+            if glob_host[s]:
+                log.emit("merge", round=r, operator=spec.merger)
             # eval is measured once per segment (at its end); intermediate
             # rounds carry None so every record has the same schema
             last = s == S - 1
-            history.append({"round": t + s,
+            history.append({"round": r,
                             "train_loss": float(mets["loss"][s]),
                             "consensus": float(mets["consensus"][s]),
                             "grad_norm": float(mets["grad_norm"][s]),
@@ -378,29 +447,45 @@ def main():
                             "comm_cost_P": comm_after[s]})
         t += S
         seg_idx += 1
-        ev_txt = ("" if merged_l is None else
-                  f"local={local_l:.4f} merged={merged_l:.4f} ")
-        print(f"[{t - 1:4d}] loss={history[-1]['train_loss']:.4f} "
-              f"{ev_txt}Xi={monitor['consensus']:.3f} "
-              f"comm={comm_cost:.1f}P", flush=True)
+        print(telemetry.format_event(rev), flush=True)
+        if merged_l is not None:
+            print(telemetry.format_event(log.emit(
+                "eval", round=t - 1, merged_eval=merged_l,
+                local_eval=local_l)), flush=True)
+        log.emit_op("segment", seg=seg_idx, rounds=S,
+                    dt=time.perf_counter() - seg_t0)
         if ckpt is not None and args.checkpoint_every and (
                 seg_idx % args.checkpoint_every == 0 or t >= args.rounds):
             # async: the host snapshot happens before save() returns, so
-            # the next segment is free to donate the live state
+            # the next segment is free to donate the live state.
+            # events_seq checkpoints the deterministic stream's position —
+            # the truncate-on-resume cursor
             ckpt.save(t, {"state": state, "key": key}, block=False, meta={
                 "round": t, "segments": seg_idx, "comm_cost": comm_cost,
                 "monitor": monitor, "history": history,
                 "data_rng": rng_np.bit_generator.state,
-                "sched_rng": sched.rng.bit_generator.state})
+                "sched_rng": sched.rng.bit_generator.state,
+                "events_seq": log.seq})
         if args.die_after_segments and seg_idx >= args.die_after_segments:
             if ckpt is not None:
                 ckpt.wait()
             print(f"fault injection: dying after segment {seg_idx} "
                   f"(round {t})", flush=True)
             os.kill(os.getpid(), signal.SIGKILL)
+    if prof:
+        prof.stop()
+        log.emit_op("profile_stop", logdir=args.profile)
+        print(f"profiler trace captured to {args.profile}")
+    print(telemetry.format_event(log.emit(
+        "run_end", rounds=args.rounds,
+        final_loss=history[-1]["train_loss"] if history else 0.0,
+        comm_cost_P=comm_cost)), flush=True)
     print(f"total {time.time()-t0:.1f}s")
     if ckpt is not None:
         ckpt.wait()
+    log.close()
+    if events_path:
+        print(f"events: {events_path} (+ {telemetry.wall_path(events_path)})")
 
     os.makedirs(args.out, exist_ok=True)
     with open(os.path.join(args.out, tag + ".json"), "w") as f:

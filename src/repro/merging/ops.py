@@ -55,6 +55,7 @@ import jax.numpy as jnp
 from repro.core import panel as panel_mod
 from repro.kernels import merge_ops as merge_kernels
 from repro.kernels import ref as ref_mod
+from repro.telemetry.trace import scope
 from repro.wire import codec as wire_codec
 
 
@@ -369,6 +370,7 @@ def get_merger(name):
         ) from None
 
 
+@scope("merge.panel")
 def merge_panel(panel, merger, *, stats=None, weights=None, spec=None,
                 wire_dtype=None, key=None, err=None,
                 use_pallas: bool = False, block_d: int = 512,

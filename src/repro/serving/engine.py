@@ -33,6 +33,7 @@ can emit out-of-vocab ids.
 from __future__ import annotations
 
 import collections
+import time
 from dataclasses import dataclass, field
 from functools import partial
 from typing import Any, Callable, Dict, List, Optional
@@ -40,6 +41,8 @@ from typing import Any, Callable, Dict, List, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.telemetry import annotate, histogram_set, scope
 
 
 # ---------------------------------------------------------------------------
@@ -77,7 +80,8 @@ def sample_token(logits, rng, temperature: float = 0.0,
 
 def make_prefill_fn(model, max_len: Optional[int] = None):
     def prefill(params, batch):
-        return model.prefill(params, batch, max_len=max_len)
+        with scope("serve.prefill"):
+            return model.prefill(params, batch, max_len=max_len)
     return jax.jit(prefill)
 
 
@@ -86,7 +90,8 @@ def make_decode_fn(model):
     input buffer in place instead of copying max_len of KV per token.
     Callers must not reuse the cache they passed in afterwards."""
     def decode(params, caches, tokens, index):
-        return model.decode_step(params, caches, tokens, index)
+        with scope("serve.decode"):
+            return model.decode_step(params, caches, tokens, index)
     return jax.jit(decode, donate_argnums=(1,))
 
 
@@ -104,7 +109,8 @@ def _tree_insert(caches, row, slot):
                                        zip(big.shape[2:], r.shape[2:])]
             r = jnp.pad(r, pads, constant_values=cval)
         return jax.lax.dynamic_update_slice_in_dim(big, r, slot, axis=1)
-    return jax.tree_util.tree_map_with_path(put, caches, row)
+    with scope("serve.insert"):
+        return jax.tree_util.tree_map_with_path(put, caches, row)
 
 
 # ---------------------------------------------------------------------------
@@ -182,13 +188,14 @@ class Request:
 
 
 class _Slot:
-    __slots__ = ("req", "pos", "last", "out")
+    __slots__ = ("req", "pos", "last", "out", "t_first")
 
-    def __init__(self, req, pos, first_token):
+    def __init__(self, req, pos, first_token, t_first=0.0):
         self.req = req
         self.pos = pos  # absolute position of the NEXT token to feed
         self.last = first_token
         self.out = [first_token]
+        self.t_first = t_first  # perf_counter at first token (TTFT mark)
 
 
 class ServingEngine:
@@ -199,11 +206,25 @@ class ServingEngine:
     device buffer. ``step()`` fetches exactly one (C,) token vector per
     tick — the scheduler needs the ids to retire slots — everything else
     stays on device.
+
+    **Telemetry.** The engine keeps its own fixed-bucket latency
+    histograms (:mod:`repro.telemetry.latency`): ``ttft_s`` (submit →
+    first token, covers queue + prefill), ``queue_wait_s`` (submit →
+    admission), ``decode_step_s`` (one jitted step incl. the (C,) token
+    fetch) and ``per_token_s`` (a retired request's steady-state decode
+    rate: time from its first token to retirement over tokens-1).
+    :meth:`snapshot` exports counters + occupancy + histogram summaries;
+    :meth:`reset` zeroes them WITHOUT touching live slots or queued work,
+    so callers can discard warmup/compile ticks (serve_bench, the serve
+    CLI). Passing ``events=`` an :class:`repro.telemetry.EventLog` emits
+    typed ``request_submit``/``request_admit``/``request_retire``
+    records.
     """
 
     def __init__(self, model, params, *, max_concurrency: int = 4,
                  max_len: int = 128, eos_id: Optional[int] = None,
-                 temperature: float = 0.0, rng=None, pad_id: int = 0):
+                 temperature: float = 0.0, rng=None, pad_id: int = 0,
+                 events=None):
         self.model, self.params = model, params
         self.cfg = model.cfg
         self.C, self.max_len = int(max_concurrency), int(max_len)
@@ -221,9 +242,11 @@ class ServingEngine:
         temp = self.temperature
 
         def step_fn(params, caches, tokens, index, rng):
-            logits, caches = model.decode_step(params, caches,
-                                               tokens[:, None], index)
-            tok = sample_token(logits, rng, temp, vocab_size=V)
+            with scope("serve.decode"):
+                logits, caches = model.decode_step(params, caches,
+                                                   tokens[:, None], index)
+            with scope("serve.sample"):
+                tok = sample_token(logits, rng, temp, vocab_size=V)
             return caches, tok
 
         self._step_fn = jax.jit(step_fn, donate_argnums=(1,))
@@ -232,6 +255,30 @@ class ServingEngine:
         self.results: Dict[Any, np.ndarray] = {}
         self.stats = {"capacity": self.C, "ticks": 0, "live_slot_ticks": 0,
                       "admitted": 0, "retired": 0, "prefill_tokens": 0}
+        self.hists = histogram_set(
+            ("ttft_s", "queue_wait_s", "decode_step_s", "per_token_s"))
+        self._t_submit: Dict[Any, float] = {}
+        self.events = events
+
+    # ------------------------------------------------------------ telemetry
+    def snapshot(self) -> Dict[str, Any]:
+        """Stats snapshot: counters + occupancy + latency summaries (and
+        the raw sparse histograms, for cross-engine aggregation)."""
+        return {**self.stats, "occupancy": self.occupancy,
+                "latency": {k: h.summary() for k, h in self.hists.items()},
+                "histograms": {k: h.to_dict() for k, h in
+                               self.hists.items()}}
+
+    def reset(self):
+        """Zero counters and histograms; slots, queue and results are NOT
+        touched — call after warmup so occupancy/latency cover only the
+        measured window (the old dict was never resettable, so occupancy
+        averaged over compile ticks)."""
+        for k in ("ticks", "live_slot_ticks", "admitted", "retired",
+                  "prefill_tokens"):
+            self.stats[k] = 0
+        for h in self.hists.values():
+            h.reset()
 
     # ----------------------------------------------------- slot primitives
     def free_slots(self) -> List[int]:
@@ -252,7 +299,13 @@ class ServingEngine:
 
     # ------------------------------------------------------------ schedule
     def submit(self, req: Request):
+        self._t_submit[req.rid] = time.perf_counter()
         self.queue.append(req)
+        if self.events is not None:
+            self.events.emit(
+                "request_submit", rid=req.rid,
+                prompt_len=int(np.asarray(req.tokens).size),
+                max_new=int(req.max_new))
 
     def _sample_host(self, logits) -> int:
         self._rng, k = jax.random.split(self._rng)
@@ -266,6 +319,13 @@ class ServingEngine:
             self.results[s.req.rid] = np.asarray(s.out, np.int32)
             self._slots[slot] = None
             self.stats["retired"] += 1
+            if len(s.out) > 1:
+                self.hists["per_token_s"].record(
+                    (time.perf_counter() - s.t_first) / (len(s.out) - 1))
+            if self.events is not None:
+                self.events.emit("request_retire", rid=s.req.rid,
+                                 slot=slot, tick=self.stats["ticks"],
+                                 tokens=len(s.out))
 
     def admit(self) -> int:
         """Prefill queued requests into free slots. Returns #admitted."""
@@ -274,6 +334,10 @@ class ServingEngine:
             if not self.queue:
                 break
             req = self.queue.popleft()
+            t_sub = self._t_submit.pop(req.rid, None)
+            if t_sub is not None:
+                self.hists["queue_wait_s"].record(
+                    time.perf_counter() - t_sub)
             prompt = np.asarray(req.tokens, np.int32).reshape(-1)
             batch = {"tokens": jnp.asarray(prompt[None])}
             for key, val in req.extras.items():
@@ -285,12 +349,20 @@ class ServingEngine:
                 raise ValueError(
                     f"request {req.rid!r}: prefix+prompt+max_new = "
                     f"{start + req.max_new} exceeds max_len={self.max_len}")
-            logits, row = self._prefill(self.params, batch)
-            self.insert(row, slot)
-            self._slots[slot] = _Slot(req, start, self._sample_host(logits))
+            with annotate("serve.admit"):
+                logits, row = self._prefill(self.params, batch)
+                self.insert(row, slot)
+                first = self._sample_host(logits)
+            t_first = time.perf_counter()
+            if t_sub is not None:
+                self.hists["ttft_s"].record(t_first - t_sub)
+            self._slots[slot] = _Slot(req, start, first, t_first)
             self.stats["admitted"] += 1
             self.stats["prefill_tokens"] += int(start)
             n += 1
+            if self.events is not None:
+                self.events.emit("request_admit", rid=req.rid, slot=slot,
+                                 tick=self.stats["ticks"])
             self._retire_if_done(slot)  # max_new == 1 / instant EOS
         return n
 
@@ -304,10 +376,13 @@ class ServingEngine:
             tokens[i] = self._slots[i].last
             index[i] = self._slots[i].pos
         self._rng, k = jax.random.split(self._rng)
-        self.caches, tok = self._step_fn(self.params, self.caches,
-                                         jnp.asarray(tokens),
-                                         jnp.asarray(index), k)
-        tok = np.asarray(tok)  # the ONE host fetch per tick: (C,) int32
+        t0 = time.perf_counter()
+        with annotate("serve.step"):
+            self.caches, tok = self._step_fn(self.params, self.caches,
+                                             jnp.asarray(tokens),
+                                             jnp.asarray(index), k)
+            tok = np.asarray(tok)  # the ONE host fetch per tick: (C,) int32
+        self.hists["decode_step_s"].record(time.perf_counter() - t0)
         self.stats["ticks"] += 1
         self.stats["live_slot_ticks"] += len(live)
         emitted = []

@@ -1,0 +1,28 @@
+"""Unified telemetry subsystem: the observability layer every later
+direction (schedule search, async gossip, scenario matrix) reports
+through.
+
+* :mod:`repro.telemetry.events`  — versioned JSONL event log (typed,
+  deterministic payload + wall-clock sidecar, console sink,
+  truncate-on-resume) and its schema validator.
+* :mod:`repro.telemetry.metrics` — per-agent (m,) metric panels computed
+  on-device inside the segment scan (loss, grad norm, distance-to-mean,
+  liveness, exact codec wire bytes).
+* :mod:`repro.telemetry.latency` — fixed-bucket latency histograms for
+  the serving engine (TTFT, queue wait, decode step, per-token).
+* :mod:`repro.telemetry.trace`   — ``named_scope`` / ``TraceAnnotation``
+  / profiler-capture hooks.
+"""
+from repro.telemetry.events import (EVENT_SCHEMAS, SCHEMA_VERSION, EventLog,
+                                    format_event, make_run_id, read_events,
+                                    validate_event, validate_stream,
+                                    wall_path)
+from repro.telemetry.latency import Histogram, default_bounds, histogram_set
+from repro.telemetry.trace import annotate, profile_trace, scope
+
+__all__ = [
+    "EVENT_SCHEMAS", "SCHEMA_VERSION", "EventLog", "format_event",
+    "make_run_id", "read_events", "validate_event", "validate_stream",
+    "wall_path", "Histogram", "default_bounds", "histogram_set",
+    "annotate", "profile_trace", "scope",
+]

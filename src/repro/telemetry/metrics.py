@@ -1,0 +1,110 @@
+"""Per-agent metric panels: on-device (m,) observables for the segment
+scan.
+
+The segment driver (``dsgd.make_panel_segment(telemetry=True)``) stacks
+these per-round vectors into (S, m) metric arrays — per-agent loss, grad
+norm, distance-to-mean (the consensus decomposition), liveness trit and
+wire bytes — returned alongside the scalar metrics in the SAME single
+``device_get`` per segment. Everything here is a pure read of panels the
+round already materialized: telemetry must never perturb the trajectory
+(pinned by tests/test_telemetry.py).
+
+Wire-byte accounting reuses the exact codec cost model
+(:attr:`PanelSpec.wire_total_bytes` — payload + scales/indices): a row
+of W equal to the identity row communicates nothing and pays 0; a delta
+(mirror) codec's GLOBAL round is full bandwidth by design
+(``panel.global_merge``), so it pays the storage bytes; a RESYNC agent
+pays the full-precision pull. Bytes are int32 — exact up to 2 GiB per
+agent-round, which covers every panel this repo ships (a 1B-param f32
+panel is ~4 GB and would need the dryrun byte model instead).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+def agent_loss(losses, alive=None):
+    """(m,) per-agent loss; non-live rows report 0 (they took no step)."""
+    if alive is None:
+        return losses.astype(jnp.float32)
+    return jnp.where(alive, losses.astype(jnp.float32), 0.0)
+
+
+def agent_grad_norm(gpan, alive=None):
+    """(m,) per-agent gradient l2 norm across all dtype groups of a grad
+    panel; non-live rows report 0."""
+    total = None
+    for x in gpan.values():
+        x32 = x.astype(jnp.float32)
+        sq = jnp.sum(x32 * x32, axis=tuple(range(1, x32.ndim)))
+        total = sq if total is None else total + sq
+    gn = jnp.sqrt(total)
+    if alive is None:
+        return gn
+    return jnp.where(alive, gn, 0.0)
+
+
+def agent_dist_to_mean(panel, live=None):
+    """(m,) per-agent distance to the panel mean — the consensus
+    decomposition: ``consensus_distance`` is exactly
+    ``sqrt(mean(dist**2))`` of these rows (live-weighted under a
+    liveness mask). Dead/stale rows still report their distance to the
+    LIVE mean: how far a stale agent has drifted is precisely the
+    straggler signal the per-agent panel exists for."""
+    first = next(iter(panel.values()))
+    m = first.shape[0]
+    if live is None:
+        w = jnp.full((m,), 1.0 / m, jnp.float32)
+    else:
+        lf = live.astype(jnp.float32)
+        w = lf / jnp.maximum(jnp.sum(lf), 1.0)
+    total = jnp.zeros((m,), jnp.float32)
+    for x in panel.values():
+        x32 = x.astype(jnp.float32)
+        mean = jnp.tensordot(w, x32, axes=1)
+        total = total + jnp.sum(jnp.square(x32 - mean[None]), axis=1)
+    return jnp.sqrt(total)
+
+
+def wire_bytes_model(spec, wire_dtype=None):
+    """Host-side (bytes_wire, bytes_full) per agent per full-panel
+    exchange: the codec-aware wire cost (``spec.wire_total_bytes``, or
+    the legacy cast's itemsize model) and the full-precision storage
+    cost (what a delta codec's global round or a RESYNC pull moves)."""
+    bytes_full = sum(jnp.dtype(k).itemsize * w for k, w in spec.groups)
+    if wire_dtype is not None:
+        it = jnp.dtype(wire_dtype).itemsize
+        return sum(it * w for _, w in spec.groups), bytes_full
+    return spec.wire_total_bytes, bytes_full
+
+
+def round_wire_bytes(W, *, bytes_wire: int, bytes_full: int,
+                     full_bandwidth=None, lv=None):
+    """(m,) int32 wire bytes each agent paid this round.
+
+    Identity rows of W (idle agents, unmatched partners, the degraded
+    rows of dead agents) pay 0 — nothing travels their wire, mirroring
+    the engine's per-row idle rule. ``full_bandwidth`` (traced bool; a
+    delta codec's global round) switches communicating rows to the
+    full-precision cost; ``lv`` (the (m,) liveness trit) zeroes DEAD
+    rows and charges RESYNC rows the full-precision pull."""
+    m = W.shape[0]
+    idle = jnp.all(W == jnp.eye(m, dtype=W.dtype), axis=1)
+    per = jnp.where(idle, 0, bytes_wire)
+    if full_bandwidth is not None:
+        per = jnp.where(jnp.logical_and(full_bandwidth, ~idle),
+                        bytes_full, per)
+    if lv is not None:
+        per = jnp.where(lv == 0, 0, per)
+        per = jnp.where(lv == 2, bytes_full, per)
+    return per.astype(jnp.int32)
+
+
+def live_trits(lv, m: int):
+    """(m,) int32 liveness column for the metric panel (all-LIVE when the
+    round carries no mask)."""
+    if lv is None:
+        return jnp.ones((m,), jnp.int32)
+    return lv.astype(jnp.int32)
