@@ -44,6 +44,19 @@ per-round bytes model the sparse gossip rounds — the single global
 merge is deliberately the full-bandwidth round (see
 wire/codec.py:TopKCodec).
 
+``--residency`` benches the storage-codec residency subsystem
+(repro/residency) — quantized panel residency so HBM stops capping the
+agent count. Per (wire, residency) configuration it records the EXACT
+per-agent resident-HBM bytes (telemetry.metrics.resident_bytes_model,
+scale sidecars included) at the default olmo-1b-family size, the max
+agent count per fixed memory budget, segment runtime and the
+matched-seed quality delta vs the f32 engine at the cpu-preset size —
+merged into BENCH_panel.json under "residency". The f32-policy row is
+asserted BIT-identical to the no-policy engine; the headline row
+(int8_ef wire + int8 moments/residual storage) is asserted to fit >= 2x
+more agents per budget than the same wire at f32 residency, with final
+eval within WIRE_MERGE_TOL.
+
 ``--telemetry`` benches the per-agent telemetry metric panels on the FULL
 segment driver (core/dsgd.make_panel_segment) at the cpu-preset size:
 ``telemetry=False`` vs ``telemetry=True`` us_per_round (the latter adds
@@ -369,6 +382,150 @@ def bench_wire(codecs, m=16, d_model=256, layers=8, vocab=512, rounds=8,
             "rounds": rounds, "codecs": out}
 
 
+# fixed HBM budget of the residency accounting: how many agents fit
+RESIDENCY_BUDGET_GB = 8.0
+
+
+def bench_residency(m=8, d_model=128, layers=2, vocab=256, rounds=8,
+                    local_steps=2, batch=4, seq=32, reps=3):
+    """Storage-codec residency (repro.residency) on the full segment
+    driver. Two measurements per (wire, residency) row:
+
+    * resident-HBM accounting at the DEFAULT olmo-1b-family bench size —
+      the exact per-agent bytes model (params + moments + EF residual +
+      merge stats, scale sidecars included) and the max agent count
+      inside a fixed ``RESIDENCY_BUDGET_GB`` budget. The spec comes from
+      ``jax.eval_shape``, so no default-size state is materialized.
+    * matched-seed training quality + runtime at the cpu-preset size —
+      same seeds, same batches, same W sequence; the uniform merged row
+      and final loss are compared against the f32 engine.
+
+    Asserts: the f32 policy is BIT-identical to the no-policy engine
+    (state and metrics), every row's final loss is within
+    ``WIRE_MERGE_TOL`` of f32, and the headline configuration (int8_ef
+    wire + int8 moments/residual storage) fits >= 2x more agents per
+    budget than the same wire at f32 residency."""
+    from repro.configs import get_config
+    from repro.core import dsgd
+    from repro.data.synthetic import SyntheticLM, make_agent_lm_batches
+    from repro.models import build_model
+    from repro.optim import make_optimizer
+    from repro.telemetry.metrics import resident_bytes_model
+
+    ROWS = (("f32", "f32", None),
+            ("moments_bf16", "f32", "moments=bf16"),
+            ("moments_int8", "f32", "moments=int8"),
+            ("moments_int8g", "f32", "moments=int8g"),
+            ("int8_ef_f32", "int8_ef", None),
+            ("int8_ef_int8res", "int8_ef", "moments=int8,wire_err=int8"))
+
+    # ---- analytic resident-bytes table at the default bench size
+    big = SIZES["default"]
+    big_tree = jax.eval_shape(
+        lambda: _make_tree(big["m"], big["d_model"], big["layers"],
+                           big["vocab"]))
+    opt = make_optimizer("adamw", 1e-2)
+    budget = int(RESIDENCY_BUDGET_GB * (1 << 30))
+    table = {}
+    big_width = None
+    for name, wire, pol in ROWS:
+        spec = panel_mod.make_spec(big_tree)
+        big_width = spec.width
+        if wire != "f32":
+            spec = panel_mod.with_wire(spec, wire)
+        spec = panel_mod.with_residency(spec, pol)
+        rb = resident_bytes_model(spec, opt)
+        table[name] = dict(rb,
+                           max_agents_at_budget=budget // rb["total"])
+    ef_ratio = (table["int8_ef_f32"]["total"]
+                / table["int8_ef_int8res"]["total"])
+    assert ef_ratio >= 2.0, (
+        "headline residency config (int8_ef wire + int8 moments/residual)"
+        f" must fit >= 2x more agents per budget, got {ef_ratio:.4f}x")
+    mom_ratio = table["f32"]["total"] / table["moments_int8"]["total"]
+
+    # ---- matched-seed quality + runtime at the cpu-preset-ish size
+    cfg = get_config("olmo-1b").reduced(d_model=d_model, layers=layers,
+                                        vocab=vocab)
+    model = build_model(cfg)
+    lm = SyntheticLM(vocab=cfg.vocab_size, num_domains=4, seed=0)
+    mixtures = lm.domain_mixtures(m, 0.5, seed=1)
+    rng_np = np.random.default_rng(2)
+    per_round = []
+    for _ in range(rounds):
+        hs = [make_agent_lm_batches(lm, mixtures, batch, seq, rng_np)
+              for _ in range(local_steps)]
+        per_round.append({k: np.stack([h[k] for h in hs]) for k in hs[0]})
+    batches = {k: jnp.asarray(np.stack([r[k] for r in per_round]))
+               for k in per_round[0]}
+    Ws = jnp.asarray(np.stack([
+        topology.random_matching(m, 0.5, np.random.default_rng(t))
+        for t in range(rounds)]), jnp.float32)
+    key = jax.random.PRNGKey(3)
+
+    def fresh(wire, pol):
+        state, spec = dsgd.init_panel_state(
+            model.init_params, opt, m, jax.random.PRNGKey(0), wire=wire,
+            residency=pol)
+        jax.block_until_ready(jax.tree.leaves(state))
+        return state, spec
+
+    def clock(wire, pol):
+        state, spec = fresh(wire, pol)
+        seg_fn = dsgd.make_panel_segment(model.loss_fn, opt, local_steps,
+                                         spec)
+        final = mets = None
+        ts = []
+        for rep in range(reps + 1):  # rep 0 = compile
+            t0 = time.perf_counter()
+            final, mets = seg_fn(state, batches, Ws, key)
+            mets = jax.device_get(mets)
+            jax.block_until_ready(jax.tree.leaves(final))
+            ts.append(time.perf_counter() - t0)
+            if rep < reps:
+                state, _ = fresh(wire, pol)
+        row = panel_mod.merged(final["panel"], spec=spec)
+        return min(ts[1:]) / rounds * 1e6, final, mets, row
+
+    us0, fin0, mets0, row0 = clock("f32", None)
+    # the f32 POLICY must compile the exact pre-residency engine
+    _, fin_id, mets_id, _ = clock("f32",
+                                  "moments=f32,stats=f32,wire_err=f32")
+    for a, b in zip(jax.tree.leaves(fin0), jax.tree.leaves(fin_id)):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), (
+            "f32 residency policy perturbed the engine state")
+    for k in mets0:
+        assert np.array_equal(np.asarray(mets0[k]),
+                              np.asarray(mets_id[k])), k
+
+    base_loss = float(mets0["loss"][-1])
+    rows = {}
+    for name, wire, pol in ROWS:
+        if name == "f32":
+            us, mets, row = us0, mets0, row0
+        else:
+            us, _, mets, row = clock(wire, pol)
+        merge_err = max(float(jnp.max(jnp.abs(row[g] - row0[g])))
+                        for g in row)
+        loss_delta = abs(float(mets["loss"][-1]) - base_loss)
+        assert loss_delta <= WIRE_MERGE_TOL, (name, loss_delta)
+        rows[name] = dict(table[name], wire=wire, residency=pol or "f32",
+                          us_per_round=round(us, 1),
+                          final_loss=round(float(mets["loss"][-1]), 5),
+                          loss_delta_vs_f32=round(loss_delta, 5),
+                          merge_max_err_vs_f32=round(merge_err, 6),
+                          quality_tol=WIRE_MERGE_TOL)
+    return {"backend": jax.default_backend(),
+            "model_size": {"m": big["m"], "D": big_width},
+            "bench_size": {"m": m, "rounds": rounds,
+                           "local_steps": local_steps},
+            "budget_bytes": budget,
+            "agents_ratio_moments_int8": round(mom_ratio, 4),
+            "agents_ratio_int8_ef_int8res": round(ef_ratio, 4),
+            "f32_policy_bit_identical": True,
+            "rows": rows}
+
+
 def bench_telemetry(m=8, d_model=128, layers=2, vocab=256, rounds=8,
                     local_steps=2, batch=4, seq=32, reps=3):
     """Per-agent telemetry overhead on the full segment driver
@@ -524,6 +681,13 @@ def main():
                          "the full segment driver: telemetry off vs on "
                          "us_per_round, overhead pct, and the bit-"
                          "identical-panels invariant")
+    ap.add_argument("--residency", action="store_true",
+                    help="bench the storage-codec residency subsystem "
+                         "(repro.residency): exact resident bytes/agent "
+                         "per policy, max agents per memory budget, and "
+                         "matched-seed quality vs the f32 engine "
+                         "(f32 policy asserted bit-identical; int8_ef + "
+                         "int8 moments/residual asserted >= 2x agents)")
     ap.add_argument("--checkpoint", action="store_true",
                     help="bench the checkpoint subsystem on the default-"
                          "size train state: blob bytes, save/restore wall "
@@ -580,6 +744,18 @@ def main():
               f"overhead={r['overhead_pct']}% "
               f"(+{r['extra_bytes_per_round']}B/round host readback)",
               flush=True)
+    if args.residency:
+        out["residency"] = bench_residency()
+        r = out["residency"]
+        hl = r["rows"]["int8_ef_int8res"]
+        print(f"residency: int8_ef + int8 moments/residual = "
+              f"{hl['total']}B/agent resident vs "
+              f"{r['rows']['int8_ef_f32']['total']}B at f32 "
+              f"({r['agents_ratio_int8_ef_int8res']}x agents per "
+              f"{r['budget_bytes'] >> 30}GiB: "
+              f"{hl['max_agents_at_budget']} vs "
+              f"{r['rows']['int8_ef_f32']['max_agents_at_budget']}), "
+              f"loss_delta={hl['loss_delta_vs_f32']}", flush=True)
     if args.checkpoint:
         out["checkpoint"] = bench_checkpoint(
             **{k: v for k, v in SIZES["default"].items() if k != "rounds"})
@@ -590,7 +766,7 @@ def main():
               f"async_handoff={r['async_handoff_s'] * 1e3:.0f}ms",
               flush=True)
     if (not args.wire and not args.sharded and not args.checkpoint
-            and not args.telemetry):
+            and not args.telemetry and not args.residency):
         # default: the sizes sweep
         out["backend"] = jax.default_backend()  # labels the "sizes" runs
         out.setdefault("sizes", {})

@@ -1,0 +1,84 @@
+"""CI residency smoke check: quantized moments must not move the run.
+
+Compares two finished ``repro.launch.train`` output directories — the
+f32 baseline and a ``--residency`` run at MATCHED seeds/schedule — and
+fails unless the final merged evals agree within the wire-merge
+tolerance (the same quality bar ``benchmarks.panel_bench`` asserts).
+Also checks the residency run's round stream actually recorded a
+SMALLER per-agent resident footprint than the baseline.
+
+    python scripts/residency_smoke.py results/residency_smoke/f32 \
+        results/residency_smoke/int8 [--tol 0.05]
+"""
+import argparse
+import glob
+import json
+import os
+import sys
+
+TOL = 0.05  # benchmarks.panel_bench.WIRE_MERGE_TOL
+
+
+def _load_run(outdir):
+    paths = sorted(glob.glob(os.path.join(outdir, "*.json")))
+    paths = [p for p in paths if not p.endswith("snapshot.json")]
+    if len(paths) != 1:
+        raise SystemExit(f"{outdir}: expected one run record, found {paths}")
+    with open(paths[0]) as f:
+        return json.load(f)
+
+
+def _final_eval(rec, outdir):
+    evals = [h["merged_eval"] for h in rec["history"]
+             if h.get("merged_eval") is not None]
+    if not evals:
+        raise SystemExit(f"{outdir}: run recorded no merged evals")
+    return evals[-1]
+
+
+def _resident_bytes(outdir):
+    for path in glob.glob(os.path.join(outdir, "events_*.jsonl")):
+        with open(path) as f:
+            for line in f:
+                ev = json.loads(line)
+                if ev.get("type") == "round" and ev.get("resident_bytes"):
+                    return ev["resident_bytes"]
+    return None
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline", help="f32 run output dir")
+    ap.add_argument("residency", help="--residency run output dir")
+    ap.add_argument("--tol", type=float, default=TOL)
+    args = ap.parse_args(argv)
+
+    base, res = _load_run(args.baseline), _load_run(args.residency)
+    pol = res["args"].get("residency")
+    if not pol:
+        raise SystemExit(f"{args.residency}: run carried no residency policy")
+    for k in ("seed", "rounds", "agents", "schedule", "merge"):
+        if base["args"].get(k) != res["args"].get(k):
+            raise SystemExit(f"runs are not matched on --{k}: "
+                             f"{base['args'].get(k)} vs {res['args'].get(k)}")
+    eb, er = _final_eval(base, args.baseline), _final_eval(res,
+                                                           args.residency)
+    delta = abs(er - eb)
+    rb_base = _resident_bytes(args.baseline)
+    rb_res = _resident_bytes(args.residency)
+    print(f"final merged eval: f32={eb:.4f} {pol}={er:.4f} "
+          f"delta={delta:.4f} (tol {args.tol})")
+    if rb_base and rb_res:
+        print(f"resident bytes/agent: f32={rb_base} {pol}={rb_res} "
+              f"({rb_base / rb_res:.2f}x)")
+        if rb_res >= rb_base:
+            raise SystemExit("residency run did not shrink resident bytes")
+    if delta > args.tol:
+        raise SystemExit(f"quantized-residency eval drifted: {delta:.4f} > "
+                         f"{args.tol}")
+    print("OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

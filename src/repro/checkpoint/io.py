@@ -1,6 +1,6 @@
 """Versioned, manifest-based checkpointing for panel train states.
 
-Blob format (``FORMAT_VERSION`` 1, msgpack): a map with
+Blob format (``FORMAT_VERSION`` 2, msgpack): a map with
 
 * ``version`` — this format version,
 * ``meta``    — a JSON-encoded bytes blob of host-side metadata (JSON,
@@ -14,7 +14,19 @@ Blob format (``FORMAT_VERSION`` 1, msgpack): a map with
 
 Writes are atomic (tmp file + fsync + ``os.replace``), so a crash
 mid-save never leaves a torn checkpoint at the target path. The legacy
-pre-versioned format (a bare flat array table) still restores.
+pre-versioned format (a bare flat array table) still restores, as do
+version-1 blobs.
+
+Version 2 marks the first format carrying residency STORAGE panels
+(repro.residency): a quantized state leaf is a nested ``{q, scale}``
+dict whose int8 codes and f32 scale sidecars land in the flat array
+table as ordinary keyed arrays — the packed bytes are saved DIRECTLY
+(an int8 moment panel costs ~1/4 of its f32 decode), and restore
+rebuilds the stored representation bit-exactly, so ``--resume`` under
+any storage codec continues the exact quantized trajectory. The table
+schema itself is unchanged from v1 (dtype-by-name already covers int8
+and bf16), so v1 readers of plain states and v2 readers of v1 blobs
+interoperate; the bump records that stored-layout states exist.
 
 :class:`Checkpointer` manages a DIRECTORY of ``step_*.ckpt`` files plus
 a ``MANIFEST.json`` (fingerprint of the run configuration + the ordered
@@ -38,7 +50,10 @@ import jax
 import msgpack
 import numpy as np
 
-FORMAT_VERSION = 1
+FORMAT_VERSION = 2
+# every blob version this build restores (2 = residency storage panels;
+# the array-table schema is identical, see the module docstring)
+READABLE_VERSIONS = (1, 2)
 MANIFEST_NAME = "MANIFEST.json"
 _STEP_FILE = re.compile(r"step_(\d+)\.ckpt$")
 
@@ -100,10 +115,10 @@ def _unpack_blob(raw: bytes) -> tuple:
         raise CheckpointCorruptError("checkpoint is not a msgpack map")
     if "version" not in obj:
         return obj, {}
-    if obj["version"] != FORMAT_VERSION:
+    if obj["version"] not in READABLE_VERSIONS:
         raise CheckpointCorruptError(
             f"unsupported checkpoint format version {obj['version']!r} "
-            f"(this build reads {FORMAT_VERSION})")
+            f"(this build reads {list(READABLE_VERSIONS)})")
     try:
         meta_bytes, payload = obj["meta"], obj["payload"]
     except KeyError as exc:

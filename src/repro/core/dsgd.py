@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import merging as merging_mod
+from repro import residency as residency_mod
 from repro import wire as wire_mod
 from repro.core import gossip
 from repro.core import panel as panel_mod
@@ -226,19 +227,124 @@ def make_dsgd_round(loss_fn: Callable, optimizer: Optimizer, local_steps: int,
 # SGD momentum mu); everything else (step_count) passes through unchanged.
 _MOMENT_KEYS = ("m", "v", "mu")
 
+# fold_in tag deriving the storage-codec stochastic-rounding keys from a
+# round/step rng WITHOUT disturbing the local-step or wire key schedules
+# (a non-stochastic residency policy never folds, so f32/bf16 storage
+# runs keep the pre-residency key schedule bit-exactly); each state kind
+# then folds its own index so moments/stats/wire_err draw independent
+# streams from the same rng
+_RES_KEY_TAG = 0x68626d00  # "hbm\0"
+_RES_KIND_IDX = {"moments": 0, "stats": 1, "wire_err": 2}
+
+
+def _res_key(rng, kind: str, needed: bool):
+    if not needed:
+        return None
+    return jax.random.fold_in(jax.random.fold_in(rng, _RES_KEY_TAG),
+                              _RES_KIND_IDX[kind])
+
+
+def _res_plan(spec):
+    """{state kind: {dtype group: Storage}} — the static application
+    table of the spec's residency policy. Storage codecs act on f32
+    state only: moment panels mirror each group's native dtype, so only
+    the 'float32' group's moments are stored; merge stats and EF
+    residuals are f32 for EVERY group (Merger.init_stats /
+    Codec.init_err build them f32), so those kinds store across all
+    groups. Resolved once at build time — the plan is trace-static."""
+    plan = {}
+    for kind, name in spec.residency:
+        st = residency_mod.get_storage(name)
+        if kind == "moments":
+            groups = [g for g, _ in spec.groups if g == "float32"]
+        else:
+            groups = [g for g, _ in spec.groups]
+        if groups:
+            plan[kind] = {g: st for g in groups}
+    return plan
+
+
+def _res_constrain(v, spec, k: str):
+    """Sharding constraint for one group's state leaf: a stored dict
+    pins q to the group layout and the scale sidecar to rows-only; a
+    plain array takes the group constraint (panel_mod._constrain_group,
+    a no-op on unsharded specs)."""
+    if isinstance(v, dict):
+        return {"q": panel_mod._constrain_group(v["q"], spec, k),
+                "scale": panel_mod.place(v["scale"],
+                                         spec.sidecar_sharding(k))}
+    return panel_mod._constrain_group(v, spec, k)
+
+
+def _res_read(stored, sts, *, use_pallas: bool = False,
+              interpret: bool = True):
+    """Decode a stored state-panel group dict to its f32 compute view
+    (groups without a storage entry pass through)."""
+    return {k: (sts[k].read(v, use_pallas=use_pallas, interpret=interpret)
+                if k in sts else v)
+            for k, v in stored.items()}
+
+
+def _res_write(panel, sts, key, spec=None, *, use_pallas: bool = False,
+               interpret: bool = True):
+    """Encode an f32 state-panel group dict into storage (per-group SR
+    keys via residency.storage_keys — sorted-group fold order, the
+    _wire_keys discipline); ``spec`` adds the sharding constraints."""
+    keys = residency_mod.storage_keys(sts, key)
+    out = {}
+    for k, v in panel.items():
+        if k in sts:
+            v = sts[k].write(v, key=keys[k], use_pallas=use_pallas,
+                             interpret=interpret)
+        out[k] = _res_constrain(v, spec, k) if spec is not None else v
+    return out
+
+
+def _res_init(panel, sts):
+    """Deterministic encode of a fresh state-panel group dict (state
+    build / RESYNC re-init — reproducible without a key schedule)."""
+    return {k: (sts[k].init(v) if k in sts else v)
+            for k, v in panel.items()}
+
+
+def _opt_read(opt, sts, mom_keys, *, use_pallas: bool = False,
+              interpret: bool = True):
+    """Optimizer state -> its f32 compute view: moment entries decode
+    through the storage, everything else (step_count) passes through."""
+    return {k: (_res_read(v, sts, use_pallas=use_pallas,
+                          interpret=interpret)
+                if k in mom_keys else v)
+            for k, v in opt.items()}
+
+
+def _opt_write(opt, sts, mom_keys, key, spec, *, use_pallas: bool = False,
+               interpret: bool = True):
+    """Encode the updated f32 moments back into storage, one folded key
+    per moment entry (sorted order) so m/v draw independent SR bits."""
+    present = sorted(k for k in opt if k in mom_keys)
+    out = dict(opt)
+    for i, k in enumerate(present):
+        mk = None if key is None else jax.random.fold_in(key, i)
+        out[k] = _res_write(opt[k], sts, mk, spec, use_pallas=use_pallas,
+                            interpret=interpret)
+    return out
+
 
 def _wire_needs_ef(spec) -> bool:
     return any(wire_mod.get_codec(name).error_feedback
                for _, name in spec.wire)
 
 
-def _init_wire_err(pan, spec):
+def _init_wire_err(pan, spec, sts=None):
     """Fresh spec-sharded error-feedback panels: each dtype group's codec
     seeds its own state (zeros for the quantization residuals, a copy of
-    the panel for the topk mirror — Codec.init_err)."""
-    return panel_mod.shard_panel(
-        {k: wire_mod.get_codec(spec.wire_of(k)).init_err(v)
-         for k, v in pan.items()}, spec)
+    the panel for the topk mirror — Codec.init_err). ``sts`` (the
+    residency plan's wire_err storages) encodes them deterministically."""
+    werr = {k: wire_mod.get_codec(spec.wire_of(k)).init_err(v)
+            for k, v in pan.items()}
+    if sts:
+        werr = _res_init(werr, sts)
+    return {k: _res_constrain(v, spec, k) for k, v in werr.items()}
 
 
 def _wire_needs_key(spec) -> bool:
@@ -250,19 +356,25 @@ def _wire_has_delta(spec) -> bool:
                for _, name in spec.wire)
 
 
-def _init_merge_stats(pan, spec):
+def _init_merge_stats(pan, spec, sts=None):
     """Fresh, spec-sharded statistics panels for the spec's merge operator
-    (None when the operator keeps no statistics)."""
+    (None when the operator keeps no statistics). ``sts`` (the residency
+    plan's stats storages) encodes them deterministically."""
     mg = merging_mod.get_merger(spec.merger)
     if not mg.stat_panels:
         return None
-    return {name: panel_mod.shard_panel(stat, spec)
-            for name, stat in mg.init_stats(pan).items()}
+    out = {}
+    for name, stat in mg.init_stats(pan).items():
+        if sts:
+            stat = _res_init(stat, sts)
+        out[name] = {k: _res_constrain(v, spec, k)
+                     for k, v in stat.items()}
+    return out
 
 
 def init_panel_state(init_params: Callable, optimizer: Optimizer, m: int,
                      rng, same_init: bool = False, mesh=None, wire=None,
-                     merger=None):
+                     merger=None, residency=None):
     """Panel train state: params AND optimizer moments as per-dtype (m, D)
     panels. Returns (state, spec); the static spec is what turns panels
     back into model pytrees. The optimizer transforms are elementwise, so
@@ -286,7 +398,15 @@ def init_panel_state(init_params: Callable, optimizer: Optimizer, m: int,
     (panel_mod.with_merger, repro.merging). A statistical operator
     (var/fisher/swa) adds ``state["merge_stat"]`` — its per-agent f32
     statistics panels, parameter-panel layout, donated through the scan
-    and updated by the segment driver."""
+    and updated by the segment driver.
+
+    ``residency`` attaches a storage-codec policy to the spec
+    (panel_mod.with_residency, repro.residency — a {kind: storage} dict
+    or a 'moments=int8,stats=bf16' policy string). The named state
+    panels are allocated DIRECTLY in their stored representation
+    (deterministic encode — int8/int8g panels become {'q', 'scale'}
+    dicts with f32 scale sidecars); no resident f32 copy ever
+    materializes, here or inside the segment."""
     params = _init_agent_params(init_params, m, rng, same_init)
     spec = panel_mod.make_spec(params)
     if mesh is not None:
@@ -295,17 +415,26 @@ def init_panel_state(init_params: Callable, optimizer: Optimizer, m: int,
         spec = panel_mod.with_wire(spec, wire)
     if merger is not None:
         spec = panel_mod.with_merger(spec, merger)
+    if residency is not None:
+        spec = panel_mod.with_residency(spec, residency)
+    plan = _res_plan(spec)
     pan = panel_mod.to_panel(params, spec)
     opt_state = jax.vmap(optimizer.init)(pan)
+    mom_sts = plan.get("moments")
+    if mom_sts:
+        opt_state = {k: (_res_init(v, mom_sts)
+                         if k in optimizer.moment_keys else v)
+                     for k, v in opt_state.items()}
     if spec.sharded:
-        opt_state = {k: (panel_mod.shard_panel(v, spec)
+        opt_state = {k: ({g: _res_constrain(x, spec, g)
+                          for g, x in v.items()}
                          if k in _MOMENT_KEYS else v)
                      for k, v in opt_state.items()}
     state = {"panel": pan, "opt": opt_state,
              "step": jnp.zeros((), jnp.int32)}
     if _wire_needs_ef(spec):
-        state["wire_err"] = _init_wire_err(pan, spec)
-    mstat = _init_merge_stats(pan, spec)
+        state["wire_err"] = _init_wire_err(pan, spec, plan.get("wire_err"))
+    mstat = _init_merge_stats(pan, spec, plan.get("stats"))
     if mstat is not None:
         state["merge_stat"] = mstat
     return state, spec
@@ -322,7 +451,17 @@ def panel_state_shardings(state, spec):
     repl = NamedSharding(spec.mesh, P())
 
     def group_sh(panel_like):
-        return {k: (spec.sharding(k) or repl) for k in panel_like}
+        out = {}
+        for k, v in panel_like.items():
+            gs = spec.sharding(k) or repl
+            if isinstance(v, dict):
+                # stored rep: q follows the group layout, the scale
+                # sidecar shards rows-only (PanelSpec.sidecar_sharding)
+                out[k] = {"q": gs,
+                          "scale": spec.sidecar_sharding(k) or repl}
+            else:
+                out[k] = gs
+        return out
 
     opt = {k: (group_sh(v) if k in _MOMENT_KEYS
                else jax.tree.map(lambda _: repl, v))
@@ -337,25 +476,44 @@ def panel_state_shardings(state, spec):
 
 
 def panelize_state(state, spec):
-    """Tree state (init_state) -> panel state (same numbers). A spec with
-    an error-feedback wire policy gets a fresh zero residual panel; a
-    statistical merge operator gets fresh statistics panels."""
-    opt = {k: (panel_mod.to_panel(v, spec) if k in _MOMENT_KEYS else v)
+    """Tree state (init_state) -> panel state (same numbers, encoded per
+    the spec's residency policy). A spec with an error-feedback wire
+    policy gets a fresh zero residual panel; a statistical merge
+    operator gets fresh statistics panels."""
+    plan = _res_plan(spec)
+    mom_sts = plan.get("moments")
+
+    def mom(v):
+        p = panel_mod.to_panel(v, spec)
+        if mom_sts:
+            p = {k: _res_constrain(x, spec, k)
+                 for k, x in _res_init(p, mom_sts).items()}
+        return p
+
+    opt = {k: (mom(v) if k in _MOMENT_KEYS else v)
            for k, v in state["opt"].items()}
     pan = panel_mod.to_panel(state["params"], spec)
     out = {"panel": pan, "opt": opt, "step": state["step"]}
     if _wire_needs_ef(spec):
-        out["wire_err"] = _init_wire_err(pan, spec)
-    mstat = _init_merge_stats(pan, spec)
+        out["wire_err"] = _init_wire_err(pan, spec, plan.get("wire_err"))
+    mstat = _init_merge_stats(pan, spec, plan.get("stats"))
     if mstat is not None:
         out["merge_stat"] = mstat
     return out
 
 
 def unpanelize_state(state, spec):
-    """Panel state -> tree state (same numbers; the wire_err residual and
+    """Panel state -> tree state (same numbers up to storage precision —
+    stored moments decode through their codec; the wire_err residual and
     merge_stat panels are panel-engine carries and are dropped)."""
-    opt = {k: (panel_mod.from_panel(v, spec) if k in _MOMENT_KEYS else v)
+    mom_sts = _res_plan(spec).get("moments")
+
+    def mom(v):
+        if mom_sts:
+            v = _res_read(v, mom_sts)
+        return panel_mod.from_panel(v, spec)
+
+    opt = {k: (mom(v) if k in _MOMENT_KEYS else v)
            for k, v in state["opt"].items()}
     return {"params": panel_mod.from_panel(state["panel"], spec), "opt": opt,
             "step": state["step"]}
@@ -482,6 +640,25 @@ def make_panel_segment(loss_fn: Callable, optimizer: Optimizer,
     (``update_local``: fisher sees the grad panel) and/or once per round
     (``update_round``: var/swa see the param panel).
 
+    **Storage residency.** The spec's residency policy
+    (panel_mod.with_residency / init_panel_state(residency=...),
+    repro.residency) keeps the named state panels — optimizer moments,
+    merge stats, the EF residual/mirror — in compressed storage (bf16,
+    int8 + scale sidecars) for the WHOLE segment; the f32 compute view
+    exists only transiently inside the round. Fusion points: moments
+    decode immediately before the vmapped optimizer update and the
+    updated moments encode back in the same donated local step (SR keys
+    folded off the step rng via a residency tag — non-stochastic runs
+    never fold, keeping the pre-residency key schedule bit-exact);
+    stats decode once at round entry and encode once at round exit;
+    the EF residual decodes/encodes strictly INSIDE the communicating
+    branches, so idle (W == I) rounds pass the stored bits through
+    verbatim. Composition with liveness is bit-predictable: DEAD rows
+    keep their stored bits (q AND scale) unchanged through the round,
+    RESYNC rows re-encode deterministically (Storage.init /
+    Storage.zero_like) so a rejoin bit-matches a freshly initialised
+    agent. An empty/f32 policy compiles the exact pre-residency trace.
+
     On a sharded ``spec`` (shard_spec / init_panel_state(mesh=...)) every
     fused op keeps the panels in their mesh layout, so mixing lowers to
     per-fsdp-shard matmuls with agent-axis collectives that carry only the
@@ -502,6 +679,18 @@ def make_panel_segment(loss_fn: Callable, optimizer: Optimizer,
     has_delta = wire_dtype is None and _wire_has_delta(spec)
     plain_merge = merger.name == "uniform" and not has_delta
     needs_stats = bool(merger.stat_panels)
+    res_plan = _res_plan(spec)
+    res_mom = res_plan.get("moments")
+    res_stat = res_plan.get("stats")
+    res_err = res_plan.get("wire_err")
+    res_mom_key = bool(res_mom) and any(s.needs_key
+                                        for s in res_mom.values())
+    res_stat_key = bool(res_stat) and any(s.needs_key
+                                          for s in res_stat.values())
+    res_err_key = bool(res_err) and any(s.needs_key
+                                        for s in res_err.values())
+    res_pallas = panel_mod._pallas_ok(use_pallas, spec)
+    mom_keys = tuple(optimizer.moment_keys)
     if telemetry:
         # host constants of the exact codec cost model, baked into the
         # traced wire_bytes column
@@ -530,6 +719,32 @@ def make_panel_segment(loss_fn: Callable, optimizer: Optimizer,
         def row_mask(mask, a):
             """(m,) bool mask broadcast against a leading-(m,) leaf."""
             return mask.reshape((m,) + (1,) * (a.ndim - 1))
+
+        def err_dec(e):
+            # EF residual storage: decode ONLY inside the communicating
+            # branches — idle rounds never touch the stored bits
+            if not res_err or e is None:
+                return e
+            return _res_read(e, res_err, use_pallas=res_pallas,
+                             interpret=interpret)
+
+        def err_enc(ne, ekey, eold, W):
+            # re-encode the post-mix residual; idle ROWS of W (unmatched
+            # agents — their residual value is untouched by the mix)
+            # keep their OLD stored bits instead of re-quantizing the
+            # decoded value: strictly better precision, and it preserves
+            # the per-row idle rule bit-exactly through storage
+            if not res_err or ne is None:
+                return ne
+            enc = _res_write(ne, res_err, ekey, spec,
+                             use_pallas=res_pallas, interpret=interpret)
+            if eold is not None:
+                ir = jnp.all(W == jnp.eye(m, dtype=W.dtype), axis=1)
+                enc = {k: (jax.tree.map(
+                    lambda a, b: jnp.where(row_mask(ir, a), b, a),
+                    v, eold[k]) if k in res_err else v)
+                    for k, v in enc.items()}
+            return enc
 
         def agent_mets(out_pan, la, ga, lv, alive, W, full_bw):
             # the per-agent metric panel: pure reads of arrays the round
@@ -573,8 +788,24 @@ def make_panel_segment(loss_fn: Callable, optimizer: Optimizer,
                     upd = merger.update_local(mstat, gpan)
                     mstat = upd if alive is None else freeze(upd, mstat)
                 with scope("dsgd.local_update"):
-                    new_pan, new_opt = jax.vmap(optimizer.update)(
-                        gpan, opt, pan)
+                    if not res_mom:
+                        new_pan, new_opt = jax.vmap(optimizer.update)(
+                            gpan, opt, pan)
+                    else:
+                        # moment storage fusion: decode -> update ->
+                        # re-encode inside the SAME donated step (the f32
+                        # view is a transient XLA temporary, never a
+                        # carried buffer); the SR key folds off the
+                        # LOCAL-STEP rng so every step draws fresh bits
+                        opt_f = _opt_read(opt, res_mom, mom_keys,
+                                          use_pallas=res_pallas,
+                                          interpret=interpret)
+                        new_pan, new_opt = jax.vmap(optimizer.update)(
+                            gpan, opt_f, pan)
+                        new_opt = _opt_write(
+                            new_opt, res_mom, mom_keys,
+                            _res_key(r, "moments", res_mom_key), spec,
+                            use_pallas=res_pallas, interpret=interpret)
                 if alive is None:
                     loss = jnp.mean(losses)
                     gn = panel_mod.panel_norm(gpan, axis_mean=True)
@@ -592,8 +823,8 @@ def make_panel_segment(loss_fn: Callable, optimizer: Optimizer,
 
             return local_body
 
-        def _live_comm(pan, opt, werr, mstat, W, wkey, lv, alive, glob,
-                       losses, gns, la=None, ga=None):
+        def _live_comm(pan, opt, werr, mstat, W, wkey, ekey, lv, alive,
+                       glob, losses, gns, la=None, ga=None):
             # elastic round: mix over the (already degraded) W, then
             # apply the liveness mask — DEAD rows pass through, RESYNC
             # rows pull the live agents' post-mix mean and restart their
@@ -614,11 +845,13 @@ def make_panel_segment(loss_fn: Callable, optimizer: Optimizer,
                 # itself is unused — the live-only Xi is computed below
                 p, e = args
                 if monitor:
-                    mixed, _, ne = panel_mod.mix_dense_mean(p, W, err=e,
-                                                            **kw)
-                    return mixed, ne
+                    mixed, _, ne = panel_mod.mix_dense_mean(
+                        p, W, err=err_dec(e), **kw)
+                    return mixed, err_enc(ne, ekey, e, W)
                 if needs_ef:
-                    return panel_mod.mix_dense(p, W, err=e, **kw)
+                    mixed, ne = panel_mod.mix_dense(p, W, err=err_dec(e),
+                                                    **kw)
+                    return mixed, err_enc(ne, ekey, e, W)
                 return panel_mod.mix_dense(p, W, **kw), e
 
             def gossip_fn(args):
@@ -628,10 +861,10 @@ def make_panel_segment(loss_fn: Callable, optimizer: Optimizer,
                 p, e = args
                 mixed, _, ne = merging_mod.merge_panel(
                     p, merger, stats=mstat, spec=spec,
-                    wire_dtype=wire_dtype, key=wkey, err=e,
+                    wire_dtype=wire_dtype, key=wkey, err=err_dec(e),
                     use_pallas=use_pallas, interpret=interpret,
                     live=alive)
-                return mixed, ne
+                return mixed, err_enc(ne, ekey, None, None)
 
             werr_in = werr
             if plain_merge:
@@ -656,17 +889,56 @@ def make_panel_segment(loss_fn: Callable, optimizer: Optimizer,
                 out_pan[k] = panel_mod._constrain_group(y, spec, k)
             # resync rows restart their carried state from the synced
             # params: zero moments, codec-fresh residual, fresh stats
-            opt = jax.tree.map(
-                lambda a: jnp.where(row_mask(sync, a), jnp.zeros_like(a),
-                                    a), opt)
+            if not res_mom:
+                opt = jax.tree.map(
+                    lambda a: jnp.where(row_mask(sync, a),
+                                        jnp.zeros_like(a), a), opt)
+            else:
+                # stored moments zero to the CANONICAL stored zero
+                # (Storage.zero_like == init(zeros) bit-for-bit), so a
+                # rejoined row matches a freshly initialised agent's
+                def zero_rows(k, v):
+                    if k in mom_keys:
+                        zero = {g: (res_mom[g].zero_like(x)
+                                    if g in res_mom else
+                                    jax.tree.map(jnp.zeros_like, x))
+                                for g, x in v.items()}
+                    else:
+                        zero = jax.tree.map(jnp.zeros_like, v)
+                    return jax.tree.map(
+                        lambda a, z: jnp.where(row_mask(sync, a), z, a),
+                        v, zero)
+
+                opt = {k: zero_rows(k, v) for k, v in opt.items()}
             if werr_m is not None:
                 new_werr = {}
                 for k, e in werr_m.items():
-                    e = jnp.where(row_mask(not_live, e), werr_in[k], e)
-                    fresh = wire_mod.get_codec(spec.wire_of(k)).init_err(
-                        out_pan[k]).astype(e.dtype)
-                    new_werr[k] = panel_mod._constrain_group(
-                        jnp.where(row_mask(sync, e), fresh, e), spec, k)
+                    if res_err and k in res_err:
+                        # stored residual: dead rows take their OLD
+                        # stored bits leafwise (q AND scale — the PR 6
+                        # bit-exact passthrough through storage), resync
+                        # rows a deterministic re-encode of the fresh
+                        # codec state
+                        e = jax.tree.map(
+                            lambda a, b: jnp.where(
+                                row_mask(not_live, a), b, a),
+                            e, werr_in[k])
+                        fresh = res_err[k].init(
+                            wire_mod.get_codec(spec.wire_of(k)).init_err(
+                                out_pan[k]).astype(jnp.float32))
+                        e = jax.tree.map(
+                            lambda a, b: jnp.where(row_mask(sync, a), b,
+                                                   a), e, fresh)
+                        new_werr[k] = _res_constrain(e, spec, k)
+                    else:
+                        e = jnp.where(row_mask(not_live, e), werr_in[k],
+                                      e)
+                        fresh = wire_mod.get_codec(
+                            spec.wire_of(k)).init_err(
+                                out_pan[k]).astype(e.dtype)
+                        new_werr[k] = panel_mod._constrain_group(
+                            jnp.where(row_mask(sync, e), fresh, e),
+                            spec, k)
                 werr_m = new_werr
             if mstat is not None:
                 fresh = merger.init_stats(out_pan)
@@ -687,7 +959,7 @@ def make_panel_segment(loss_fn: Callable, optimizer: Optimizer,
                     is_full if has_delta else None))
             return (out_pan, opt, werr_m, mstat), mets
 
-        def run_round(carry, W, batch_r, r, glob, lv):
+        def round_core(carry, W, batch_r, r, glob, lv):
             pan, opt, werr, mstat = carry
             alive = None if lv is None else lv == 1
             rs = jax.random.split(r, local_steps)
@@ -705,9 +977,10 @@ def make_panel_segment(loss_fn: Callable, optimizer: Optimizer,
                         upd, mstat)
                 mstat = upd
             wkey = _wire_key(r, needs_key)
+            ekey = _res_key(r, "wire_err", res_err_key)
             if lv is not None:
-                return _live_comm(pan, opt, werr, mstat, W, wkey, lv,
-                                  alive, glob, losses, gns, la, ga)
+                return _live_comm(pan, opt, werr, mstat, W, wkey, ekey,
+                                  lv, alive, glob, losses, gns, la, ga)
             # W == I rounds communicate nothing: skip the matmul AND the
             # codec (no payload travels, so nothing may be quantized and
             # the error-feedback residual must pass through untouched)
@@ -727,9 +1000,9 @@ def make_panel_segment(loss_fn: Callable, optimizer: Optimizer,
                 def comm(args):
                     p, e = args
                     mixed, mean, ne = panel_mod.mix_dense_mean(
-                        p, W, err=e, **kw)
-                    return mixed, ne, panel_mod.consensus_from_mean(
-                        mixed, mean)
+                        p, W, err=err_dec(e), **kw)
+                    return (mixed, err_enc(ne, ekey, e, W),
+                            panel_mod.consensus_from_mean(mixed, mean))
 
                 def idle_fn(args):
                     p, e = args
@@ -744,9 +1017,10 @@ def make_panel_segment(loss_fn: Callable, optimizer: Optimizer,
                     p, e = args
                     mixed, _, ne = merging_mod.merge_panel(
                         p, merger, stats=mstat, spec=spec,
-                        wire_dtype=wire_dtype, key=wkey, err=e,
+                        wire_dtype=wire_dtype, key=wkey, err=err_dec(e),
                         use_pallas=use_pallas, interpret=interpret)
-                    return mixed, ne, jnp.zeros((), jnp.float32)
+                    return (mixed, err_enc(ne, ekey, None, None),
+                            jnp.zeros((), jnp.float32))
 
                 if plain_merge:
                     mixed, werr, xi = jax.lax.cond(
@@ -761,7 +1035,9 @@ def make_panel_segment(loss_fn: Callable, optimizer: Optimizer,
                 def comm(args):
                     p, e = args
                     if needs_ef:
-                        return panel_mod.mix_dense(p, W, err=e, **kw)
+                        mixed, ne = panel_mod.mix_dense(
+                            p, W, err=err_dec(e), **kw)
+                        return mixed, err_enc(ne, ekey, e, W)
                     return panel_mod.mix_dense(p, W, **kw), e
 
                 def gossip_fn(args):
@@ -771,9 +1047,9 @@ def make_panel_segment(loss_fn: Callable, optimizer: Optimizer,
                     p, e = args
                     mixed, _, ne = merging_mod.merge_panel(
                         p, merger, stats=mstat, spec=spec,
-                        wire_dtype=wire_dtype, key=wkey, err=e,
+                        wire_dtype=wire_dtype, key=wkey, err=err_dec(e),
                         use_pallas=use_pallas, interpret=interpret)
-                    return mixed, ne
+                    return mixed, err_enc(ne, ekey, None, None)
 
                 if plain_merge:
                     mixed, werr = jax.lax.cond(
@@ -789,6 +1065,43 @@ def make_panel_segment(loss_fn: Callable, optimizer: Optimizer,
                     mixed, la, ga, lv, alive, W,
                     is_full if has_delta else None))
             return (mixed, opt, werr, mstat), mets
+
+        def run_round(carry, W, batch_r, r, glob, lv):
+            if not res_stat or carry[3] is None:
+                return round_core(carry, W, batch_r, r, glob, lv)
+            # stat-panel storage: ONE decode to the f32 compute view at
+            # round entry, one encode at round exit — every operator the
+            # round runs (update_local/update_round/merge_panel) sees
+            # f32. DEAD rows keep their stored bits verbatim (q AND
+            # scale); RESYNC rows encode deterministically so a rejoin
+            # bit-matches a fresh init of the synced params.
+            pan, opt, werr, mstat = carry
+            mstat_f = {name: _res_read(grp, res_stat,
+                                       use_pallas=res_pallas,
+                                       interpret=interpret)
+                       for name, grp in mstat.items()}
+            (pan, opt, werr, mstat_f), mets = round_core(
+                (pan, opt, werr, mstat_f), W, batch_r, r, glob, lv)
+            skey = _res_key(r, "stats", res_stat_key)
+            sync = None if lv is None else lv == 2
+            dead = None if lv is None else lv == 0
+            new_mstat = {}
+            for i, name in enumerate(sorted(mstat_f)):
+                ki = None if skey is None else jax.random.fold_in(skey, i)
+                enc = _res_write(mstat_f[name], res_stat, ki, None,
+                                 use_pallas=res_pallas,
+                                 interpret=interpret)
+                if lv is not None:
+                    det = _res_init(mstat_f[name], res_stat)
+                    old = mstat[name]
+                    enc = {g: jax.tree.map(
+                        lambda a, d_, o_: jnp.where(
+                            row_mask(dead, a), o_,
+                            jnp.where(row_mask(sync, a), d_, a)),
+                        v, det[g], old[g]) for g, v in enc.items()}
+                new_mstat[name] = {g: _res_constrain(v, spec, g)
+                                   for g, v in enc.items()}
+            return (pan, opt, werr, new_mstat), mets
 
         def round_body(carry, xs):
             W, batch_r, r = xs[:3]

@@ -78,6 +78,7 @@ def merged_panel_tree(panel, spec, merger=None, stats=None, weights=None,
     layout, so this is safe to jit on sharded panel states (see
     :func:`counterfactual_eval`)."""
     mg = merging_mod.get_merger(spec.merger if merger is None else merger)
+    stats = merging_mod.decode_stats(stats, spec)
     row = mg.merge_row(panel, stats=stats, weights=weights, spec=spec,
                        live=live)
     return panel_mod.from_panel(row, spec, cast=False)

@@ -41,6 +41,15 @@ the right lowering when leaves carry heterogeneous shardings
 path is validated/benchmarked against (tests/test_panel_sharded.py,
 benchmarks/panel_bench.py).
 
+**Storage residency.** :attr:`PanelSpec.residency` (:func:`with_residency`)
+carries the per-state-kind storage-codec policy (repro/residency): the
+moment / merge-stat / EF-residual panels can live in HBM as bf16 or int8
+(+ f32 scale sidecars) and be decoded to f32 only inside the fused round.
+The spec owns the policy and the exact byte accounting
+(:meth:`PanelSpec.storage_bytes`, :meth:`PanelSpec.sidecar_sharding`); the
+encode/decode placement is the segment driver's (core/dsgd.py). The
+fused ops here never see stored reps — they operate on the decoded view.
+
 **Merge operators.** :attr:`PanelSpec.merger` (:func:`with_merger`) names
 the operator GLOBAL rounds apply — uniform mean, weighted, inverse
 variance, diagonal Fisher, TIES, SWA (repro/merging). 'uniform' keeps the
@@ -101,6 +110,12 @@ class PanelSpec:
     pspecs: Tuple[Tuple[str, P], ...] = ()  # (dtype key, group PartitionSpec)
     wire: Tuple[Tuple[str, str], ...] = ()  # (dtype key, codec name) policy
     merger: str = "uniform"                 # merge operator (repro.merging)
+    # (state kind, storage name) residency policy over the RESIDENT state
+    # panels — 'moments' / 'stats' / 'wire_err' (repro.residency); params
+    # always keep their native dtypes. () means everything stays f32
+    # (with_residency drops explicit 'f32' entries so an f32 policy IS
+    # the empty policy — byte-identical specs, byte-identical traces)
+    residency: Tuple[Tuple[str, str], ...] = ()
 
     @property
     def width(self) -> int:
@@ -141,6 +156,35 @@ class PanelSpec:
         itemsize)."""
         return self.wire_total_bytes
 
+    def residency_of(self, kind: str) -> str:
+        """Storage-codec name for one state-panel kind ('moments',
+        'stats', 'wire_err'); 'f32' when no policy is set."""
+        for k, name in self.residency:
+            if k == kind:
+                return name
+        return "f32"
+
+    def storage_bytes(self, kind: str, state_dtype: Optional[str] = None
+                      ) -> int:
+        """Exact per-agent resident HBM bytes of ONE state panel of
+        ``kind`` under the residency policy, scale sidecars included.
+
+        Storage codecs apply to f32 state only; a group whose state
+        rides in another dtype (``state_dtype=None`` means the state
+        mirrors each group's native dtype, as optimizer moments do) pays
+        its plain itemsize. ``state_dtype='float32'`` models the panels
+        that are f32 for EVERY group (merge stats, EF residuals)."""
+        from repro import residency as residency_mod
+        st = residency_mod.get_storage(self.residency_of(kind))
+        total = 0
+        for g, w in self.groups:
+            dt = state_dtype or g
+            if dt == "float32":
+                total += st.resident_bytes(1, w)
+            else:
+                total += jnp.dtype(dt).itemsize * w
+        return total
+
     @property
     def sharded(self) -> bool:
         return self.mesh is not None and bool(self.pspecs)
@@ -164,6 +208,16 @@ class PanelSpec:
         if self.mesh is None or ps is None:
             return None
         return NamedSharding(self.mesh, P(*ps[1:2]))
+
+    def sidecar_sharding(self, key: str) -> Optional[NamedSharding]:
+        """NamedSharding of a per-row storage sidecar (the int8 scale
+        columns, (m, n_scales)): rows follow the group's agent axes, the
+        tiny scale columns stay replicated (they don't divide by fsdp
+        and aren't worth sharding)."""
+        ps = self.pspec(key)
+        if self.mesh is None or ps is None:
+            return None
+        return NamedSharding(self.mesh, P(ps[0]))
 
 
 def make_spec(tree) -> PanelSpec:
@@ -224,6 +278,36 @@ def with_wire(spec: PanelSpec, wire) -> PanelSpec:
     for name in mapping.values():
         wire_mod.get_codec(name)
     return replace(spec, wire=tuple(sorted(mapping.items())))
+
+
+def with_residency(spec: PanelSpec, residency) -> PanelSpec:
+    """Attach a storage-codec residency policy to ``spec``.
+
+    ``residency`` is a {state-kind: storage-name} dict or a CLI policy
+    string for ``residency.parse_policy`` ('moments=int8,stats=bf16', or
+    a bare storage name for the moments); kinds are 'moments' / 'stats'
+    / 'wire_err' (params always keep their native dtypes — compressing
+    what the mixing matmul reads every round is a WIRE question), names
+    are ``repro.residency.STORAGE`` keys ('f32', 'bf16', 'int8',
+    'int8g', 'int8r'). Explicit 'f32' entries are dropped — the f32 policy IS the
+    empty policy, so the resulting spec (and every trace keyed on it) is
+    byte-identical to one that never saw a policy. None clears. Like
+    with_merger, only registry NAMES can live on the hashable spec."""
+    if residency is None:
+        return replace(spec, residency=())
+    from repro import residency as residency_mod
+    mapping = residency_mod.parse_policy(residency)
+    named = {}
+    for kind, name in mapping.items():
+        if not isinstance(name, str):
+            raise ValueError(
+                "with_residency takes registry NAMES (the spec stays "
+                "hashable); register custom Storage instances in "
+                "residency.STORAGE first")
+        st = residency_mod.get_storage(name)
+        if st.name != "f32":
+            named[kind] = st.name
+    return replace(spec, residency=tuple(sorted(named.items())))
 
 
 def with_merger(spec: PanelSpec, merger) -> PanelSpec:

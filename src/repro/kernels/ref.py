@@ -107,6 +107,40 @@ def dequantize_int4_ref(q, scale, group: int = 128):
             * expand_group_scale(scale, q.shape[1], group))
 
 
+def int8_group_scale_ref(x, group: int = 128):
+    """Grouped symmetric int8 scales for an (m, D) panel: one amax/127
+    scale per row per ``group``-column block -> (m, ceil(D/group)) f32
+    (the int4 grouped-scale layout at int8 range — the 'int8g' storage
+    codec). Partial tail groups reduce over their real columns only;
+    all-zero groups map to scale 1/127."""
+    m, D = x.shape
+    gn = -(-D // group)
+    pad = gn * group - D
+    mag = jnp.abs(x.astype(jnp.float32))
+    if pad:
+        mag = jnp.pad(mag, ((0, 0), (0, pad)))
+    amax = jnp.max(mag.reshape(m, gn, group), axis=2)
+    return jnp.where(amax > 0, amax, 1.0) / 127.0
+
+
+def quantize_int8_grouped_ref(x, scale, u=None, group: int = 128):
+    """x: (m, D); scale: (m, ceil(D/group)) f32 -> int8 in [-127, 127].
+
+    Oracle for kernels/wire_quant.py:quantize_int8_grouped_panel (the
+    'int8g' residency storage). Same rounding contract as
+    quantize_int8_ref: ``u`` selects stochastic floor(x/scale + u),
+    ``u=None`` rounds to nearest."""
+    s = x.astype(jnp.float32) / expand_group_scale(scale, x.shape[1], group)
+    q = jnp.floor(s + u) if u is not None else jnp.round(s)
+    return jnp.clip(q, -127.0, 127.0).astype(jnp.int8)
+
+
+def dequantize_int8_grouped_ref(q, scale, group: int = 128):
+    """q: (m, D) int8; scale: (m, ceil(D/group)) f32 -> f32 panel."""
+    return (q.astype(jnp.float32)
+            * expand_group_scale(scale, q.shape[1], group))
+
+
 def pack_int4_ref(q):
     """(m, D) int4-valued int8 -> (m, ceil(D/2)) uint8 packed nibbles:
     even column in the LOW nibble, odd column in the HIGH nibble (an odd

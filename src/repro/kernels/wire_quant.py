@@ -35,8 +35,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.ref import (int4_group_scale_ref, int8_scale_ref,
-                               topk_threshold_ref)
+from repro.kernels.ref import (int4_group_scale_ref, int8_group_scale_ref,
+                               int8_scale_ref, topk_threshold_ref)
 
 
 def _round_kernel(x_ref, s_ref, o_ref):
@@ -242,6 +242,92 @@ def dequantize_int4_panel(q, scale, *, group: int = 128,
     sg = bd // group
     out = pl.pallas_call(
         functools.partial(_dequant4_kernel, group),
+        grid=(nd,),
+        in_specs=[
+            pl.BlockSpec((m, bd), lambda i: (0, i)),
+            pl.BlockSpec((m, sg), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((m, bd), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((m, Dp), jnp.float32),
+        interpret=interpret,
+    )(qp, sp)
+    return out[:, :D]
+
+
+# ------------------------------------------------------- grouped int8
+# the 'int8g' residency storage layout: int8 range against the int4
+# kernels' grouped-scale blocking (one scale per row per ``group``
+# columns), for state panels whose row amax is dominated by a few
+# coordinates
+
+
+def _round8g_kernel(group, x_ref, s_ref, o_ref):
+    se = jnp.repeat(s_ref[...], group, axis=1)
+    s = x_ref[...].astype(jnp.float32) / se
+    o_ref[...] = jnp.clip(jnp.round(s), -127.0, 127.0).astype(jnp.int8)
+
+
+def _stoch8g_kernel(group, x_ref, s_ref, u_ref, o_ref):
+    se = jnp.repeat(s_ref[...], group, axis=1)
+    s = x_ref[...].astype(jnp.float32) / se
+    o_ref[...] = jnp.clip(jnp.floor(s + u_ref[...]),
+                          -127.0, 127.0).astype(jnp.int8)
+
+
+def _dequant8g_kernel(group, q_ref, s_ref, o_ref):
+    se = jnp.repeat(s_ref[...], group, axis=1)
+    o_ref[...] = q_ref[...].astype(jnp.float32) * se
+
+
+def quantize_int8_grouped_panel(x, scale=None, u=None, *, group: int = 128,
+                                block_d: int = 512, interpret: bool = True):
+    """x: (m, D) float panel -> (q int8 (m, D),
+    scale (m, ceil(D/group)) f32).
+
+    ``scale`` defaults to the grouped amax/127 (int8_group_scale_ref);
+    blocking and scale residency as in quantize_int4_panel. ``u``
+    (uniform [0, 1), shape of x) selects stochastic rounding. Matches
+    kernels/ref.py:quantize_int8_grouped_ref bit-for-bit."""
+    m, D = x.shape
+    if scale is None:
+        scale = int8_group_scale_ref(x, group)
+    bd = _int4_blocking(D, group, block_d)
+    xp, Dp = _pad_cols(x, bd)
+    nd = Dp // bd
+    sp = _pad_group_scale(scale, Dp, group)
+    sg = bd // group
+    scale_spec = pl.BlockSpec((m, sg), lambda i: (0, i))
+    data_spec = pl.BlockSpec((m, bd), lambda i: (0, i))
+    if u is None:
+        kernel = functools.partial(_round8g_kernel, group)
+        ops, in_specs = (xp, sp), [data_spec, scale_spec]
+    else:
+        up, _ = _pad_cols(u, bd)
+        kernel = functools.partial(_stoch8g_kernel, group)
+        ops, in_specs = (xp, sp, up), [data_spec, scale_spec, data_spec]
+    q = pl.pallas_call(
+        kernel,
+        grid=(nd,),
+        in_specs=in_specs,
+        out_specs=data_spec,
+        out_shape=jax.ShapeDtypeStruct((m, Dp), jnp.int8),
+        interpret=interpret,
+    )(*ops)
+    return q[:, :D], scale
+
+
+def dequantize_int8_grouped_panel(q, scale, *, group: int = 128,
+                                  block_d: int = 512,
+                                  interpret: bool = True):
+    """q: (m, D) int8; scale (m, ceil(D/group)) f32 -> f32 panel."""
+    m, D = q.shape
+    bd = _int4_blocking(D, group, block_d)
+    qp, Dp = _pad_cols(q, bd)
+    nd = Dp // bd
+    sp = _pad_group_scale(scale, Dp, group)
+    sg = bd // group
+    out = pl.pallas_call(
+        functools.partial(_dequant8g_kernel, group),
         grid=(nd,),
         in_specs=[
             pl.BlockSpec((m, bd), lambda i: (0, i)),

@@ -30,6 +30,11 @@ Variants (the §Perf levers; "baseline" is the paper-faithful config):
   panel_topkwire  panel engine with the top-k sparse-innovation codec
                 (mirror panel as the EF state; the mix lowers to the
                 delta form x + (W - I) @ mirror, not one dense matmul)
+  panel_residency_int8  panel engine with the moments=int8 residency
+                policy (repro.residency: grouped signed-sqrt companded
+                int8 moment storage) — the record's memory_analysis and
+                ``resident_bytes_per_agent`` extra show the per-agent
+                HBM drop vs the plain panel variant
 """
 
 import argparse  # noqa: E402
@@ -177,15 +182,18 @@ def build_train_panel(cfg, shape, multi_pod, variant, scan=True):
             else "int8" if "int8wire" in variant
             else "int4" if "int4wire" in variant
             else "topk" if "topkwire" in variant else None)
+    residency = {"moments": "int8"} if "residency_int8" in variant else None
     params_sds = jax.eval_shape(
         lambda k: dsgd._init_agent_params(model.init_params, m, k, False),
         key)
     spec = panel_mod.shard_spec(panel_mod.make_spec(params_sds), mesh)
     if wire is not None:
         spec = panel_mod.with_wire(spec, wire)
+    if residency is not None:
+        spec = panel_mod.with_residency(spec, residency)
     state_sds = jax.eval_shape(
         lambda k: dsgd.init_panel_state(model.init_params, opt, m, k,
-                                        wire=wire)[0],
+                                        wire=wire, residency=residency)[0],
         key)
     param_ps = resolve(model.param_spec(), params_sds, mesh, TRAIN_RULES,
                        prefix=(("pod", "agent"),))
@@ -210,10 +218,13 @@ def build_train_panel(cfg, shape, multi_pod, variant, scan=True):
     w_sds = jax.ShapeDtypeStruct((1, m, m), jnp.float32)
     key_sds = jax.eval_shape(lambda: jax.random.PRNGKey(0))
     args = (state_sds, seg_batch, w_sds, key_sds)
+    from repro.telemetry.metrics import resident_bytes_model
+    res = resident_bytes_model(spec, opt)
     return fn, args, mesh, TRAIN_RULES, {"agents": m,
                                          "panel_width": spec.width,
                                          "wire_bytes_per_agent":
-                                             spec.wire_bytes}
+                                             spec.wire_bytes,
+                                         "resident_bytes_per_agent": res}
 
 
 def build_serve(cfg, shape, multi_pod, variant):

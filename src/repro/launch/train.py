@@ -53,6 +53,7 @@ from repro.data.synthetic import SyntheticLM, make_agent_lm_batches
 from repro.launch import mesh as mesh_mod
 from repro.models import build_model
 from repro.optim import make_optimizer
+from repro.telemetry.metrics import resident_bytes_model
 
 
 def build_mesh(kind: str, preset: str, cfg):
@@ -125,6 +126,16 @@ def main():
                          "extra donated residual panel), topk ships only "
                          "the k largest innovations per agent against a "
                          "mirror panel (error feedback built in)")
+    ap.add_argument("--residency", default="",
+                    help="storage-codec policy for the engine's state "
+                         "panels (repro.residency): 'kind=codec' pairs "
+                         "joined by ',' over kinds moments/stats/wire_err "
+                         "and codecs f32/bf16/int8/int8g, or a bare codec "
+                         "for the moments (e.g. 'moments=int8,stats=bf16'"
+                         "). Params stay f32; int8 moments cut resident "
+                         "HBM ~4x per moment panel (stochastic rounding, "
+                         "per-row scales; int8g = grouped scales). Empty/"
+                         "f32 = the bit-exact pre-residency engine")
     ap.add_argument("--merge", default="uniform",
                     choices=sorted(merging_mod.MERGERS),
                     help="merge operator applied on global rounds "
@@ -188,6 +199,10 @@ def main():
                          "else console-only. Resume-safe: the stream is "
                          "truncated to the checkpointed seq so baseline "
                          "and kill+resume runs emit byte-identical files")
+    ap.add_argument("--snapshot", default="",
+                    help="periodic JSON telemetry snapshot path "
+                         "(telemetry.SnapshotExporter riding the event "
+                         "log's sink; rewritten atomically each round)")
     ap.add_argument("--profile", default="",
                     help="capture a jax profiler trace of the training "
                          "loop into this logdir (view with tensorboard/"
@@ -238,6 +253,8 @@ def main():
     tag = f"{args.arch}_{args.schedule}_a{args.alpha}"
     if args.merge != "uniform":
         tag += f"_m{args.merge}"
+    if args.residency:
+        tag += "_r" + args.residency.replace("=", "").replace(",", "_")
 
     # the run configuration that DEFINES the trajectory (the checkpoint
     # fingerprint keys): checkpoint/resume/telemetry plumbing is excluded
@@ -245,7 +262,7 @@ def main():
     run_cfg = {k: vars(args)[k] for k in (
         "arch", "preset", "agents", "rounds", "local_steps", "batch",
         "seq", "segment", "schedule", "window_start", "window_end",
-        "optimizer", "lr", "alpha", "wire", "merge",
+        "optimizer", "lr", "alpha", "wire", "residency", "merge",
         "eval_merged_every", "seed", "faults")}
     run_id = telemetry.make_run_id(run_cfg)
     events_path = args.events or (
@@ -261,10 +278,17 @@ def main():
     key = jax.random.PRNGKey(args.seed)
     state, spec = dsgd.init_panel_state(model.init_params, opt, m, key,
                                         mesh=mesh, wire=args.wire,
-                                        merger=sched.merger)
+                                        merger=sched.merger,
+                                        residency=args.residency or None)
     print(f"wire codec {args.wire}: {spec.wire_payload_bytes} B/agent "
           f"payload ({spec.wire_total_bytes} B with scales/indices) per "
           f"full-panel exchange; merge operator {spec.merger}")
+    res_bytes = resident_bytes_model(spec, opt)
+    print(f"residency {args.residency or 'f32'}: "
+          f"{res_bytes['total']} B/agent resident "
+          f"(params {res_bytes['params']}, moments {res_bytes['moments']}, "
+          f"wire_err {res_bytes['wire_err']}, "
+          f"merge_stat {res_bytes['merge_stat']})")
     segment_fn = dsgd.make_panel_segment(model.loss_fn, opt,
                                          args.local_steps, spec,
                                          telemetry=args.telemetry)
@@ -346,9 +370,11 @@ def main():
     # truncated back to the checkpointed seq — replayed rounds are
     # re-emitted exactly once, keeping baseline vs kill+resume streams
     # byte-identical (scripts/fault_smoke.py pins this)
+    snap = (telemetry.SnapshotExporter(args.snapshot)
+            if args.snapshot else None)
     log = telemetry.EventLog(
         events_path, run_id=run_id,
-        resume_at=resume_seq if events_path else None)
+        resume_at=resume_seq if events_path else None, sink=snap)
     if resume_seq is None:
         print(telemetry.format_event(log.emit(
             "run_start", run_id=run_id, schema=telemetry.SCHEMA_VERSION,
@@ -432,7 +458,8 @@ def main():
                 grad_norm=float(mets["grad_norm"][s]),
                 grad_norm_max=float(mets["grad_norm_max"][s]),
                 consensus=float(mets["consensus"][s]),
-                comm_cost_P=float(comm_after[s]), **extra)
+                comm_cost_P=float(comm_after[s]),
+                resident_bytes=int(res_bytes["total"]), **extra)
             if glob_host[s]:
                 log.emit("merge", round=r, operator=spec.merger)
             # eval is measured once per segment (at its end); intermediate
@@ -484,6 +511,9 @@ def main():
     if ckpt is not None:
         ckpt.wait()
     log.close()
+    if snap is not None:
+        snap.close()
+        print(f"telemetry snapshot: {args.snapshot}")
     if events_path:
         print(f"events: {events_path} (+ {telemetry.wall_path(events_path)})")
 

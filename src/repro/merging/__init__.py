@@ -10,4 +10,4 @@ core/merge.py (``merge_stacked`` / ``counterfactual_eval(merger=...)``).
 from repro.merging.ops import (MERGERS, FisherMerger,  # noqa: F401
                                Merger, SwaMerger, TiesMerger,
                                UniformMerger, VarMerger, WeightedMerger,
-                               get_merger, merge_panel)
+                               decode_stats, get_merger, merge_panel)

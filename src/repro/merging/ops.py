@@ -370,6 +370,27 @@ def get_merger(name):
         ) from None
 
 
+def decode_stats(stats, spec):
+    """Dequantize stat panels held in a residency STORAGE layout.
+
+    Under a ``--residency stats=...`` policy the engine carries
+    ``state["merge_stat"]`` in its storage encoding (e.g. int8 q+scale
+    dicts); every merge entry point decodes through the spec's storage
+    codec before the operator reads them. ``Storage.maybe_read`` is
+    idempotent on already-decoded f32 leaves, so in-engine callers that
+    decoded at round entry pass through unchanged — as do bare-spec
+    (f32-residency) runs, bit-exactly."""
+    if stats is None or spec is None:
+        return stats
+    name = spec.residency_of("stats")
+    if name == "f32":
+        return stats
+    from repro import residency as residency_mod
+    st = residency_mod.get_storage(name)
+    return {sn: {g: st.maybe_read(v) for g, v in grp.items()}
+            for sn, grp in stats.items()}
+
+
 @scope("merge.panel")
 def merge_panel(panel, merger, *, stats=None, weights=None, spec=None,
                 wire_dtype=None, key=None, err=None,
@@ -399,6 +420,7 @@ def merge_panel(panel, merger, *, stats=None, weights=None, spec=None,
     storage dtypes, the merged {group: (D_g,) f32} row, and the updated
     EF residual (None when ``err`` is)."""
     merger = get_merger(merger)
+    stats = decode_stats(stats, spec)
     pallas = panel_mod._pallas_ok(use_pallas, spec)
     delta = {k: False for k in panel}
     if merger.uses_panel:

@@ -46,6 +46,12 @@ class Optimizer:
     init: Callable  # params -> state
     update: Callable  # (grads, state, params, step) -> (new_params, new_state)
     name: str = ""
+    # state keys holding per-parameter MOMENT pytrees (the (m, D)-panel
+    # state a residency policy may store quantized; scalars like
+    # step_count are excluded). The segment driver routes exactly these
+    # keys through the storage view — ``update`` itself always sees the
+    # decoded panels, so optimizers stay storage-agnostic.
+    moment_keys: tuple = ()
 
 
 def sgd(schedule, momentum: float = 0.0, weight_decay: float = 0.0,
@@ -73,7 +79,8 @@ def sgd(schedule, momentum: float = 0.0, weight_decay: float = 0.0,
         new_params = jax.tree.map(lambda p, u: p - lr * u, params, upd)
         return new_params, {"mu": mu, "step_count": state["step_count"] + 1}
 
-    return Optimizer(init=init, update=update, name="sgd")
+    return Optimizer(init=init, update=update, name="sgd",
+                     moment_keys=("mu",) if momentum else ())
 
 
 def adamw(schedule, b1=0.9, b2=0.999, eps=1e-8,
@@ -105,7 +112,8 @@ def adamw(schedule, b1=0.9, b2=0.999, eps=1e-8,
         new_params = jax.tree.map(upd, params, m, v)
         return new_params, {"m": m, "v": v, "step_count": count}
 
-    return Optimizer(init=init, update=update, name="adamw")
+    return Optimizer(init=init, update=update, name="adamw",
+                     moment_keys=("m", "v"))
 
 
 def make_optimizer(name: str, lr, total_steps: int = 1000,

@@ -1,0 +1,13 @@
+"""Quantized panel residency: storage codecs for the resident state
+panels (see residency/storage.py for the contract).
+
+The panel engine (core/panel.py) carries a per-state-kind policy — a
+``(kind, storage-name)`` table on ``PanelSpec.residency`` via
+``panel.with_residency`` — resolved through :func:`get_storage`; the
+segment driver (core/dsgd.py) fuses the encode/decode into the donated
+round so the optimizer update reads dequantized moments and writes back
+quantized storage in the same step."""
+from repro.residency.storage import (KINDS, STORAGE,  # noqa: F401
+                                     Bf16Storage, F32Storage, Int8Storage,
+                                     Storage, get_storage, parse_policy,
+                                     storage_keys)

@@ -12,17 +12,22 @@ through.
   the serving engine (TTFT, queue wait, decode step, per-token).
 * :mod:`repro.telemetry.trace`   — ``named_scope`` / ``TraceAnnotation``
   / profiler-capture hooks.
+* :mod:`repro.telemetry.export`  — periodic JSON snapshot reduction over
+  the event stream (``EventLog(sink=SnapshotExporter(...))``) and the
+  offline ``python -m repro.telemetry.export`` CLI.
 """
 from repro.telemetry.events import (EVENT_SCHEMAS, SCHEMA_VERSION, EventLog,
                                     format_event, make_run_id, read_events,
                                     validate_event, validate_stream,
                                     wall_path)
+from repro.telemetry.export import SnapshotExporter, export_stream
 from repro.telemetry.latency import Histogram, default_bounds, histogram_set
 from repro.telemetry.trace import annotate, profile_trace, scope
 
 __all__ = [
     "EVENT_SCHEMAS", "SCHEMA_VERSION", "EventLog", "format_event",
     "make_run_id", "read_events", "validate_event", "validate_stream",
-    "wall_path", "Histogram", "default_bounds", "histogram_set",
+    "wall_path", "SnapshotExporter", "export_stream",
+    "Histogram", "default_bounds", "histogram_set",
     "annotate", "profile_trace", "scope",
 ]

@@ -35,7 +35,11 @@ import threading
 import time
 from typing import Callable, Dict, List, Optional
 
-SCHEMA_VERSION = 1
+# v2: 'round' gains the optional 'resident_bytes' field — the exact
+# per-agent resident-HBM cost of the run's residency policy
+# (metrics.resident_bytes_model), a host constant stamped on every
+# round. v1 streams (no such field) still validate.
+SCHEMA_VERSION = 2
 
 # Field types: int / float / str / bool / dict / id (int-or-str) /
 # list[float] / list[int]; a '?' prefix marks the field optional.
@@ -50,6 +54,8 @@ EVENT_SCHEMAS: Dict[str, Dict[str, str]] = {
         "loss_agent": "?list[float]", "grad_norm_agent": "?list[float]",
         "dist_to_mean": "?list[float]", "live": "?list[int]",
         "wire_bytes": "?list[int]",
+        # per-agent resident HBM bytes under the residency policy (v2)
+        "resident_bytes": "?int",
     },
     "merge": {"round": "int", "operator": "str"},
     "eval": {"round": "int", "merged_eval": "float", "local_eval": "float"},

@@ -80,6 +80,41 @@ def wire_bytes_model(spec, wire_dtype=None):
     return spec.wire_total_bytes, bytes_full
 
 
+def resident_bytes_model(spec, optimizer=None, wire_dtype=None):
+    """Host-side exact per-agent resident HBM bytes of the engine's
+    panel state under the spec's residency policy — the storage-codec
+    counterpart of :func:`wire_bytes_model`.
+
+    Returns ``{"params", "moments", "wire_err", "merge_stat", "total"}``
+    in bytes per agent, scale sidecars included
+    (:meth:`PanelSpec.storage_bytes`). Moments count
+    ``optimizer.moment_keys`` panels (AdamW's two when ``optimizer`` is
+    None) and mirror each group's native dtype, so only f32 groups pay
+    the storage codec; the wire-error residual exists only when the wire
+    policy runs error feedback (and the legacy ``wire_dtype`` cast,
+    which disables EF, zeroes it); merge statistics count the spec
+    merger's ``stat_panels``. This model is pinned exact against
+    ``jax.eval_shape`` of the real state by the residency conformance
+    tests."""
+    from repro import merging as merging_mod
+    from repro import wire as wire_mod
+    params = sum(jnp.dtype(k).itemsize * w for k, w in spec.groups)
+    n_mom = 2 if optimizer is None else len(optimizer.moment_keys)
+    moments = n_mom * spec.storage_bytes("moments")
+    needs_ef = wire_dtype is None and any(
+        wire_mod.get_codec(spec.wire_of(k)).error_feedback
+        for k, _ in spec.groups)
+    wire_err = (spec.storage_bytes("wire_err", state_dtype="float32")
+                if needs_ef else 0)
+    merger = merging_mod.get_merger(spec.merger)
+    merge_stat = (len(merger.stat_panels)
+                  * spec.storage_bytes("stats", state_dtype="float32"))
+    out = {"params": params, "moments": moments, "wire_err": wire_err,
+           "merge_stat": merge_stat}
+    out["total"] = sum(out.values())
+    return out
+
+
 def round_wire_bytes(W, *, bytes_wire: int, bytes_full: int,
                      full_bandwidth=None, lv=None):
     """(m,) int32 wire bytes each agent paid this round.

@@ -1,0 +1,462 @@
+"""Storage-codec conformance suite: one parametrized harness over EVERY
+entry in ``repro.residency.STORAGE``.
+
+Each test body is storage-GENERIC — it reads only the shared contract
+surface (``needs_key``, ``init`` / ``write`` / ``read`` / ``maybe_read``
+/ ``zero_like``, ``transform_fwd`` / ``transform_inv``,
+``resident_bytes`` accounting) and never branches on a codec's NAME.
+Registering a new storage in ``STORAGE`` is all it takes to put it
+under the full contract:
+
+* ``resident_bytes`` equals the ``.nbytes`` of the actual stored
+  arrays (odd widths exercise the grouped-scale ceil tails) and is
+  linear in rows; ``PanelSpec.storage_bytes`` and the telemetry
+  ``resident_bytes_model`` agree with it;
+* ``zero_like`` is bit-identical to ``init(zeros)`` and decodes to
+  exact zeros (the RESYNC canonical re-init contract);
+* round-trip error is bounded by half a quantization step in the
+  codec's TRANSFORM domain (identity for linear codecs, signed-sqrt
+  for the companded int8 moment storages);
+* stochastic rounding is unbiased over PRNG keys in the transform
+  domain (the value domain picks up a small positive Jensen bias on
+  companded codecs — the safe direction for Adam's second moment);
+  deterministic storages are key-invariant;
+* the Pallas kernel path is bit-identical to the XLA/ref path, and
+  sharded writes match replicated ones (``threefry_partitionable``);
+* an all-f32 residency policy leaves the spec AND a full segment run
+  byte-identical to the no-policy engine; quantized-moment policies
+  track the f32 run's loss; dead agents' STORED rows (q and scale
+  sidecars) pass through a segment bit-exactly;
+* checkpoints round-trip every stored representation bit-exactly, and
+  v1 blobs (same table schema, pre-packed-blob header) still load.
+"""
+import json
+import zlib
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+import pytest
+
+from repro import merging as merging_mod
+from repro import residency as res_mod
+from repro import telemetry
+from repro.checkpoint import io as ckpt_io
+from repro.core import dsgd
+from repro.core import panel as panel_mod
+from repro.optim import make_optimizer
+from repro.telemetry.metrics import resident_bytes_model
+from test_panel import _segment_inputs, _toy_problem
+
+pytestmark = pytest.mark.residency
+
+STORAGE_NAMES = sorted(res_mod.STORAGE)
+
+
+def _panel(m, d, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(m, d)) * scale, jnp.float32)
+
+
+def _moment_panel(m, d, seed):
+    """Adam-v-like panel: strictly positive, wide dynamic range."""
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(
+        np.square(rng.normal(size=(m, d)))
+        * np.exp(rng.normal(size=(m, d)) * 2.0) * 1e-4, jnp.float32)
+
+
+def _key_for(st, seed=0):
+    return jax.random.PRNGKey(seed) if st.needs_key else None
+
+
+def _leaves_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ------------------------------------------------------------ registry
+
+
+@pytest.mark.parametrize("name", STORAGE_NAMES)
+def test_registry_contract(name):
+    st = res_mod.get_storage(name)
+    assert st is res_mod.STORAGE[name]
+    assert st.name == name
+    assert res_mod.get_storage(st) is st  # instance pass-through
+    assert isinstance(st.needs_key, bool)
+    m, d = 3, 257
+    rb = st.resident_bytes(m, d)
+    assert 0 < rb <= m * d * 4
+    # accounting is per-row linear: rows scale the byte count exactly
+    assert st.resident_bytes(2 * m, d) == 2 * rb
+
+
+def test_unknown_storage_and_kind_fail_at_parse_time():
+    with pytest.raises(ValueError, match="unknown storage"):
+        res_mod.get_storage("int7")
+    with pytest.raises(ValueError, match="unknown state kinds"):
+        res_mod.parse_policy("params=int8")
+    with pytest.raises(ValueError, match="unknown storage"):
+        res_mod.parse_policy("moments=int7")
+    assert res_mod.parse_policy(None) == {}
+    assert res_mod.parse_policy("int8") == {"moments": "int8"}
+    assert res_mod.parse_policy("moments=int8,stats=bf16") == {
+        "moments": "int8", "stats": "bf16"}
+
+
+# ----------------------------------------------------- byte accounting
+
+
+@pytest.mark.parametrize("name", STORAGE_NAMES)
+def test_resident_bytes_match_stored_nbytes(name):
+    """resident_bytes must equal the .nbytes of the ACTUAL stored arrays
+    (odd width exercises the grouped-scale ceil tail), and the
+    spec-level / telemetry accounting must agree with the codec's."""
+    st = res_mod.get_storage(name)
+    m, d = 3, 333
+    stored = st.init(_moment_panel(m, d, seed=5))
+    nb = sum(int(a.nbytes) for a in jax.tree.leaves(stored))
+    assert nb == st.resident_bytes(m, d), name
+
+    x = _panel(1, d, seed=5)
+    spec = panel_mod.with_residency(panel_mod.make_spec({"w": x}),
+                                    {"moments": name})
+    assert spec.storage_bytes("moments") == st.resident_bytes(1, d)
+    opt = make_optimizer("adamw", 1e-2)
+    model = resident_bytes_model(spec, opt)
+    assert model["moments"] == 2 * st.resident_bytes(1, d)
+    assert model["params"] == 4 * d
+    assert model["total"] == sum(v for k, v in model.items()
+                                 if k != "total")
+
+
+# ----------------------------------------------------- codec contract
+
+
+@pytest.mark.parametrize("name", STORAGE_NAMES)
+def test_write_requires_key_iff_stochastic(name):
+    st = res_mod.get_storage(name)
+    x = _moment_panel(2, 64, seed=7)
+    if st.needs_key:
+        with pytest.raises(ValueError, match="key"):
+            st.write(x)
+    else:
+        a = st.write(x)
+        b = st.write(x, key=jax.random.PRNGKey(0))
+        _leaves_equal(a, b)  # key-invariant
+
+
+@pytest.mark.parametrize("name", STORAGE_NAMES)
+def test_zero_like_is_init_zeros(name):
+    """zero_like must be BIT-identical to init(zeros) — the RESYNC
+    canonical re-init rule — and decode to exact zeros."""
+    st = res_mod.get_storage(name)
+    z = jnp.zeros((3, 96), jnp.float32)
+    stored = st.init(_moment_panel(3, 96, seed=9))
+    _leaves_equal(st.zero_like(stored), st.init(z))
+    assert float(jnp.max(jnp.abs(st.read(st.zero_like(stored))))) == 0.0
+
+
+@pytest.mark.parametrize("name", STORAGE_NAMES)
+def test_roundtrip_bounded_in_transform_domain(name):
+    """read(init(x)) must sit within half a quantization step of x in
+    the codec's transform domain; maybe_read(read(...)) is idempotent
+    (an already-decoded f32 view passes through untouched)."""
+    st = res_mod.get_storage(name)
+    x = _moment_panel(4, 320, seed=11)
+    stored = st.init(x)
+    back = st.read(stored)
+    assert back.dtype == jnp.float32
+    y, yhat = st.transform_fwd(x), st.transform_fwd(back)
+    err = jnp.abs(yhat - y)
+    if isinstance(stored, dict):  # int8 family: step == stored scale
+        g = st.group or x.shape[1]
+        step = jnp.repeat(stored["scale"], g, axis=1)[:, :x.shape[1]]
+        assert bool(jnp.all(err <= 0.5 * step * (1 + 1e-5) + 1e-12)), name
+    else:  # dtype-cast family: half a ulp at the value's scale
+        eps = jnp.finfo(stored.dtype).eps
+        assert bool(jnp.all(err <= 0.5 * eps * jnp.abs(y) + 1e-12)), name
+    decoded = st.maybe_read(back)
+    np.testing.assert_array_equal(np.asarray(decoded), np.asarray(back))
+    _leaves_equal(st.read(stored), st.maybe_read(stored))
+
+
+@pytest.mark.parametrize("name", STORAGE_NAMES)
+def test_stochastic_unbiased_in_transform_domain(name):
+    """Key-driven storages: E_key[decode] == x within 6 empirical
+    standard errors per element IN THE TRANSFORM DOMAIN (companded
+    codecs' SR is unbiased on sign(x)*sqrt(|x|); squaring back adds a
+    positive Jensen term, so the value domain is NOT where the bound
+    holds). Same small-p binomial slack as the wire harness."""
+    st = res_mod.get_storage(name)
+    if not st.needs_key:
+        pytest.skip("deterministic storage (key-invariance covered)")
+    m, d = 3, 40
+    x = _moment_panel(m, d, seed=13)
+    y = st.transform_fwd(x)
+    N = 256
+    keys = jax.random.split(jax.random.PRNGKey(3), N)
+    yhats = jax.vmap(
+        lambda k: st.transform_fwd(st.read(st.write(x, key=k))))(keys)
+    mean_err = jnp.abs(jnp.mean(yhats, axis=0) - y)
+    se = jnp.std(yhats, axis=0) / np.sqrt(N)
+    step = jnp.max(jnp.max(yhats, axis=0) - jnp.min(yhats, axis=0),
+                   axis=1, keepdims=True)
+    assert bool(jnp.all(mean_err <= 6.0 * se + 6.0 * step / N
+                        + 1e-7)), name
+
+
+# ------------------------------------------------- kernel / jit parity
+
+
+@pytest.mark.parametrize("name", STORAGE_NAMES)
+def test_pallas_path_matches_ref_path(name):
+    """write/read with use_pallas=True must be bit-identical to the
+    XLA/ref path given the same key (non-divisible width exercises the
+    kernels' padded tails)."""
+    st = res_mod.get_storage(name)
+    x = _moment_panel(5, 333, seed=17)
+    key = _key_for(st, seed=4)
+    a = st.write(x, key=key, use_pallas=False)
+    b = st.write(x, key=key, use_pallas=True)
+    _leaves_equal(a, b)
+    np.testing.assert_array_equal(
+        np.asarray(st.read(a, use_pallas=False)),
+        np.asarray(st.read(b, use_pallas=True)))
+
+
+@pytest.mark.parametrize("name", STORAGE_NAMES)
+def test_writes_bit_identical_sharded_vs_replicated(name):
+    """A jitted write with the input sharded over rows must store the
+    same bits as the jitted replicated write — the scoped
+    ``threefry_partitionable`` contract, same as the wire codecs'."""
+    st = res_mod.get_storage(name)
+    m, d = 4, 96
+    x = _moment_panel(m, d, seed=19)
+    key = _key_for(st, seed=6)
+    enc = jax.jit(lambda xx: st.write(xx, key=key))
+    ja = enc(x)
+    from jax.sharding import Mesh, NamedSharding
+    from jax.sharding import PartitionSpec as P
+    ndev = min(4, jax.device_count())
+    mesh = Mesh(np.asarray(jax.devices()[:ndev]), ("rows",))
+    xs = jax.device_put(x, NamedSharding(mesh, P("rows", None)))
+    _leaves_equal(ja, enc(xs))
+
+
+def test_grouped_single_group_matches_per_row():
+    """An Int8Storage whose group covers the whole width must store the
+    exact bits of the per-row layout (one scale per row either way)."""
+    d = 200
+    per_row = res_mod.Int8Storage("a")
+    one_group = res_mod.Int8Storage("b", group=512)
+    x = _moment_panel(3, d, seed=21)
+    key = jax.random.PRNGKey(5)
+    a, b = per_row.write(x, key=key), one_group.write(x, key=key)
+    assert a["scale"].shape == b["scale"].shape == (3, 1)
+    _leaves_equal(a, b)
+
+
+# --------------------------------------------------- engine contracts
+
+
+def _run_segment(policy, live=None, seed=0):
+    m, H, S, dim, classes = 4, 2, 3, 10, 3
+    init_params, loss_fn = _toy_problem(m, dim, classes)
+    opt = make_optimizer("adamw", 1e-2)
+    Ws, (bx, by) = _segment_inputs(S, H, m, dim, classes, seed=seed)
+    pstate, spec = dsgd.init_panel_state(
+        init_params, opt, m, jax.random.PRNGKey(0), residency=policy)
+    before = jax.tree.map(lambda v: v + 0.0, pstate)  # donated below
+    seg_fn = dsgd.make_panel_segment(loss_fn, opt, H, spec)
+    out, mets = seg_fn(pstate, (bx, by), Ws, jax.random.PRNGKey(1),
+                       live=live)
+    return spec, before, out, mets
+
+
+def test_f32_policy_is_byte_identical_to_no_policy():
+    """Explicit f32 entries are dropped from the spec, and the full
+    segment run (state AND metrics) is bit-identical to the engine
+    that never saw a policy."""
+    pol = {"moments": "f32", "stats": "f32", "wire_err": "f32"}
+    spec_a, _, out_a, mets_a = _run_segment(None)
+    spec_b, _, out_b, mets_b = _run_segment(pol)
+    assert spec_a == spec_b
+    assert spec_b.residency == ()
+    _leaves_equal(out_a, out_b)
+    _leaves_equal(mets_a, mets_b)
+
+
+@pytest.mark.parametrize("name", [n for n in STORAGE_NAMES if n != "f32"])
+def test_quantized_moments_track_f32_run(name):
+    """Every non-identity storage on the moments must keep the toy
+    segment's loss trajectory within tolerance of the f32 engine
+    (bf16/companded-int8 moment error does not derail AdamW)."""
+    _, _, _, base = _run_segment(None)
+    _, _, out, mets = _run_segment({"moments": name})
+    assert all(np.isfinite(np.asarray(mets["loss"]).ravel()))
+    delta = float(np.max(np.abs(np.asarray(mets["loss"])
+                                - np.asarray(base["loss"]))))
+    assert delta <= 0.05, (name, delta)
+    # stored moments really are the quantized rep, not silent f32
+    mom = out["opt"]["m"]["float32"]
+    if name == "bf16":
+        assert mom.dtype == jnp.bfloat16
+    else:
+        assert mom["q"].dtype == jnp.int8
+
+
+@pytest.mark.parametrize("name", [n for n in STORAGE_NAMES if n != "f32"])
+def test_dead_rows_pass_through_stored_bits(name):
+    """An agent DEAD for the whole segment must keep its STORED moment
+    representation — q and scale sidecar rows, not just the decoded
+    view — bit-exactly, same as the f32 engine's liveness contract."""
+    m, S, dead = 4, 3, 2
+    live = np.ones((S, m), np.int32)
+    live[:, dead] = 0
+    _, before, out, _ = _run_segment({"moments": name},
+                                     live=jnp.asarray(live))
+    for mk in ("m", "v"):
+        b, a = before["opt"][mk]["float32"], out["opt"][mk]["float32"]
+        for leaf_b, leaf_a in zip(jax.tree.leaves(b), jax.tree.leaves(a)):
+            np.testing.assert_array_equal(
+                np.asarray(leaf_b)[dead], np.asarray(leaf_a)[dead])
+            assert bool(jnp.any(leaf_a[0] != leaf_b[0]))  # live rows move
+
+
+def test_merge_decode_stats_accepts_stored_or_decoded():
+    """merging.decode_stats must decode a stored stat rep and pass an
+    already-decoded f32 view through untouched (idempotence)."""
+    x = _panel(1, 64, seed=23)
+    spec = panel_mod.with_residency(
+        panel_mod.with_merger(panel_mod.make_spec({"w": x}), "var"),
+        {"stats": "int8r"})
+    st = res_mod.get_storage("int8r")
+    raw = _panel(4, 64, seed=25, scale=0.3)
+    stats = {"second": {"float32": st.init(raw)}}
+    once = merging_mod.decode_stats(stats, spec)
+    assert once["second"]["float32"].dtype == jnp.float32
+    twice = merging_mod.decode_stats(once, spec)
+    _leaves_equal(once, twice)
+    np.testing.assert_array_equal(
+        np.asarray(once["second"]["float32"]),
+        np.asarray(st.read(st.init(raw))))
+
+
+# ------------------------------------------------------- checkpointing
+
+
+@pytest.mark.parametrize("name", STORAGE_NAMES)
+def test_checkpoint_roundtrip_stored_rep(name):
+    """A policy-bearing panel state must save/restore every stored
+    representation (int8 q + f32 scale sidecars included) bit-exactly."""
+    init_params, _ = _toy_problem(4, 10, 3)
+    opt = make_optimizer("adamw", 1e-2)
+    pstate, _ = dsgd.init_panel_state(
+        init_params, opt, 4, jax.random.PRNGKey(0),
+        residency={"moments": name})
+    import tempfile
+    with tempfile.TemporaryDirectory() as td:
+        path = f"{td}/state.ckpt"
+        ckpt_io.save(path, pstate, meta={"residency": name})
+        like = jax.tree.map(
+            lambda v: jax.ShapeDtypeStruct(v.shape, v.dtype), pstate)
+        back, meta = ckpt_io.restore(path, like, with_meta=True)
+    assert meta == {"residency": name}
+    _leaves_equal(pstate, back)
+
+
+def test_checkpoint_restore_continue_bitexact(tmp_path):
+    """save → restore → run a segment must reproduce the uninterrupted
+    run bit-exactly under a quantized policy (the stored q/scale bits,
+    not a dequantized approximation, are what round-trips)."""
+    m, H, S, dim, classes = 4, 2, 2, 10, 3
+    init_params, loss_fn = _toy_problem(m, dim, classes)
+    opt = make_optimizer("adamw", 1e-2)
+    Ws, (bx, by) = _segment_inputs(S, H, m, dim, classes)
+    pstate, spec = dsgd.init_panel_state(
+        init_params, opt, m, jax.random.PRNGKey(0),
+        residency={"moments": "int8", "stats": "bf16"})
+    seg_fn = dsgd.make_panel_segment(loss_fn, opt, H, spec)
+    mid, _ = seg_fn(pstate, (bx, by), Ws, jax.random.PRNGKey(1))
+
+    path = str(tmp_path / "mid.ckpt")
+    ckpt_io.save(path, mid)
+    like = jax.tree.map(lambda v: jax.ShapeDtypeStruct(v.shape, v.dtype),
+                        mid)
+    restored = ckpt_io.restore(path, like)
+
+    Ws2, (bx2, by2) = _segment_inputs(S, H, m, dim, classes, seed=1)
+    key2 = jax.random.PRNGKey(2)
+    cont, cmets = seg_fn(jax.tree.map(jnp.asarray, restored),
+                         (bx2, by2), Ws2, key2)
+    base, bmets = seg_fn(mid, (bx2, by2), Ws2, key2)
+    _leaves_equal(base, cont)
+    _leaves_equal(bmets, cmets)
+
+
+def test_checkpoint_v1_blob_still_loads(tmp_path):
+    """The v1 header (same flat array table, version=1) must keep
+    loading under the v2 reader — old run checkpoints stay live."""
+    assert 1 in ckpt_io.READABLE_VERSIONS
+    tree = {"a": np.arange(6, dtype=np.float32).reshape(2, 3),
+            "q": np.arange(4, dtype=np.int8)}
+    payload = msgpack.packb(
+        {k: {"dtype": a.dtype.name, "shape": list(a.shape),
+             "data": a.tobytes()} for k, a in tree.items()})
+    meta_bytes = json.dumps({"v": 1}).encode()
+    blob = msgpack.packb({
+        "version": 1, "meta": meta_bytes, "payload": payload,
+        "crc": zlib.crc32(meta_bytes + payload) & 0xFFFFFFFF})
+    path = tmp_path / "v1.ckpt"
+    path.write_bytes(blob)
+    back, meta = ckpt_io.restore(str(path), tree, with_meta=True)
+    assert meta == {"v": 1}
+    _leaves_equal(tree, back)
+    with pytest.raises(ckpt_io.CheckpointCorruptError, match="version"):
+        bad = msgpack.packb({"version": 99, "meta": meta_bytes,
+                             "payload": payload, "crc": 0})
+        (tmp_path / "v99.ckpt").write_bytes(bad)
+        ckpt_io.restore(str(tmp_path / "v99.ckpt"), tree)
+
+
+# ----------------------------------------------------- snapshot export
+
+
+def test_snapshot_exporter_and_cli(tmp_path, capsys):
+    """The EventLog sink folds rounds (resident_bytes included, schema
+    v2) into an atomic snapshot; the offline CLI replays the stream to
+    the same reduction."""
+    events = str(tmp_path / "events.jsonl")
+    snap_path = str(tmp_path / "snap.json")
+    snap = telemetry.SnapshotExporter(snap_path, every=1)
+    log = telemetry.EventLog(events, run_id="t", sidecar=False, sink=snap)
+    log.emit("run_start", run_id="t", schema=telemetry.SCHEMA_VERSION,
+             config={"residency": "moments=int8"})
+    for r in range(3):
+        log.emit("round", round=r, loss=1.0 - r * 0.1, grad_norm=1.0,
+                 grad_norm_max=1.0, consensus=0.1, comm_cost_P=1.0,
+                 resident_bytes=7_135_723)
+    log.emit("eval", round=2, merged_eval=0.7, local_eval=0.8)
+    log.emit("run_end", rounds=3, final_loss=0.8, comm_cost_P=3.0)
+    log.close()
+    final = snap.close()
+    assert final["resident_bytes_per_agent"] == 7_135_723
+    assert final["events"]["round"] == 3
+    assert final["last_round"]["round"] == 2
+    assert final["evals"] == [
+        {"round": 2, "merged_eval": 0.7, "local_eval": 0.8}]
+    with open(snap_path) as f:
+        assert json.load(f) == final
+    # the stream itself stays schema-valid (round.resident_bytes is v2)
+    assert telemetry.validate_stream(events) == []
+    # offline CLI replays to the same reduction
+    from repro.telemetry import export as export_mod
+    out2 = str(tmp_path / "replay.json")
+    assert export_mod.main([events, "--out", out2]) == 0
+    with open(out2) as f:
+        replay = json.load(f)
+    assert replay == final
+    assert "6 events" in capsys.readouterr().out
