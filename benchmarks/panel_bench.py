@@ -410,7 +410,8 @@ def bench_residency(m=8, d_model=128, layers=2, vocab=256, rounds=8,
     from repro.data.synthetic import SyntheticLM, make_agent_lm_batches
     from repro.models import build_model
     from repro.optim import make_optimizer
-    from repro.telemetry.metrics import resident_bytes_model
+    from repro.telemetry.metrics import (moment_traffic_model,
+                                         resident_bytes_model)
 
     ROWS = (("f32", "f32", None),
             ("moments_bf16", "f32", "moments=bf16"),
@@ -435,8 +436,16 @@ def bench_residency(m=8, d_model=128, layers=2, vocab=256, rounds=8,
             spec = panel_mod.with_wire(spec, wire)
         spec = panel_mod.with_residency(spec, pol)
         rb = resident_bytes_model(spec, opt)
+        tr = moment_traffic_model(spec, opt, local_steps=local_steps)
+        # agents-per-budget off PEAK bytes (stored + the unfused path's
+        # transient f32 decode views, zero under the fused kernel) —
+        # the stored-only sizing the pre-fusion table used overstated
+        # capacity for every unfused non-f32 policy
         table[name] = dict(rb,
-                           max_agents_at_budget=budget // rb["total"])
+                           max_agents_at_budget=budget // rb["peak"],
+                           max_agents_stored_only=budget // rb["total"],
+                           moment_traffic_bytes_per_round=tr[
+                               "bytes_per_round"])
     ef_ratio = (table["int8_ef_f32"]["total"]
                 / table["int8_ef_int8res"]["total"])
     assert ef_ratio >= 2.0, (
@@ -524,6 +533,159 @@ def bench_residency(m=8, d_model=128, layers=2, vocab=256, rounds=8,
             "agents_ratio_int8_ef_int8res": round(ef_ratio, 4),
             "f32_policy_bit_identical": True,
             "rows": rows}
+
+
+def bench_residency_fused(m=8, d_model=128, layers=2, vocab=256, rounds=8,
+                          local_steps=2, batch=4, seq=32, reps=3):
+    """The fused int8 moment kernel (kernels/opt_fused.py) vs the PR-9
+    unfused decode->update->encode path, on the same harness as
+    bench_residency (same seeds, same batches, same W sequence).
+
+    * analytic per-round moment HBM traffic at the default bench size
+      (metrics.moment_traffic_model): the unfused path's 16 B/scalar of
+      transient f32 view traffic per stored panel vs the fused kernel's
+      stored-rep-only reads/writes. Asserts the ~4x (>= 3x) reduction.
+    * matched-seed training: fused and unfused int8 runs must produce
+      BIT-identical final state (the fused ref path is the unfused
+      composition by construction), and the fused run's final loss must
+      sit within WIRE_MERGE_TOL of the f32 engine.
+    * fallback byte-identity: an f32-policy engine and a bf16-moments
+      engine are bit-unchanged by the fused dispatch (auto-off — the
+      PR-9 paths compile verbatim).
+    * measured bytes accessed per segment from XLA cost_analysis on the
+      compiled fused/unfused segments — informational on CPU (interpret
+      -mode Pallas inflates the fused number; the analytic model is the
+      HBM-traffic headline, cf. the dryrun cost model).
+    """
+    from repro.configs import get_config
+    from repro.core import dsgd
+    from repro.data.synthetic import SyntheticLM, make_agent_lm_batches
+    from repro.models import build_model
+    from repro.optim import make_optimizer
+    from repro.telemetry.metrics import (fused_moments_auto,
+                                         moment_traffic_model,
+                                         resident_bytes_model)
+
+    # ---- analytic moment-traffic model at the default bench size
+    big = SIZES["default"]
+    big_tree = jax.eval_shape(
+        lambda: _make_tree(big["m"], big["d_model"], big["layers"],
+                           big["vocab"]))
+    opt = make_optimizer("adamw", 1e-2)
+    spec_big = panel_mod.with_residency(panel_mod.make_spec(big_tree),
+                                        "moments=int8")
+    assert fused_moments_auto(spec_big, opt), \
+        "int8 moments + adamw must auto-qualify for the fused kernel"
+    tr_fused = moment_traffic_model(spec_big, opt, local_steps=local_steps,
+                                    fused=True)
+    tr_unfused = moment_traffic_model(spec_big, opt,
+                                      local_steps=local_steps, fused=False)
+    traffic_ratio = (tr_unfused["bytes_per_round"]
+                     / tr_fused["bytes_per_round"])
+    assert traffic_ratio >= 3.0, (
+        "fused int8 moment update must cut per-round moment HBM traffic "
+        f">= 3x vs the unfused path, model says {traffic_ratio:.2f}x")
+    rb_fused = resident_bytes_model(spec_big, opt, fused=True)
+    rb_unfused = resident_bytes_model(spec_big, opt, fused=False)
+
+    # ---- matched-seed fused vs unfused vs f32 at the cpu-preset size
+    cfg = get_config("olmo-1b").reduced(d_model=d_model, layers=layers,
+                                        vocab=vocab)
+    model = build_model(cfg)
+    lm = SyntheticLM(vocab=cfg.vocab_size, num_domains=4, seed=0)
+    mixtures = lm.domain_mixtures(m, 0.5, seed=1)
+    rng_np = np.random.default_rng(2)
+    per_round = []
+    for _ in range(rounds):
+        hs = [make_agent_lm_batches(lm, mixtures, batch, seq, rng_np)
+              for _ in range(local_steps)]
+        per_round.append({k: np.stack([h[k] for h in hs]) for k in hs[0]})
+    batches = {k: jnp.asarray(np.stack([r[k] for r in per_round]))
+               for k in per_round[0]}
+    Ws = jnp.asarray(np.stack([
+        topology.random_matching(m, 0.5, np.random.default_rng(t))
+        for t in range(rounds)]), jnp.float32)
+    key = jax.random.PRNGKey(3)
+
+    def fresh(pol):
+        state, spec = dsgd.init_panel_state(
+            model.init_params, opt, m, jax.random.PRNGKey(0),
+            residency=pol)
+        jax.block_until_ready(jax.tree.leaves(state))
+        return state, spec
+
+    def clock(pol, fused):
+        state, spec = fresh(pol)
+        seg_fn = dsgd.make_panel_segment(model.loss_fn, opt, local_steps,
+                                         spec, fused=fused)
+        compiled = seg_fn.lower(state, batches, Ws, key).compile()
+        ca = compiled.cost_analysis() or {}
+        if isinstance(ca, list):
+            ca = ca[0] if ca else {}
+        bytes_acc = float(ca.get("bytes accessed", 0.0))
+        final = mets = None
+        ts = []
+        for rep in range(reps + 1):  # rep 0 = compile
+            t0 = time.perf_counter()
+            final, mets = seg_fn(state, batches, Ws, key)
+            mets = jax.device_get(mets)
+            jax.block_until_ready(jax.tree.leaves(final))
+            ts.append(time.perf_counter() - t0)
+            if rep < reps:
+                state, _ = fresh(pol)
+        return min(ts[1:]) / rounds * 1e6, final, mets, bytes_acc
+
+    us_f32, fin_f32, mets_f32, _ = clock(None, None)
+    us_fused, fin_fused, mets_fused, ba_fused = clock("moments=int8", True)
+    us_unf, fin_unf, mets_unf, ba_unf = clock("moments=int8", False)
+
+    # fused vs unfused: same SR keys, same core expression -> same bits
+    for a, b in zip(jax.tree.leaves(fin_fused), jax.tree.leaves(fin_unf)):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), (
+            "fused int8 moment update diverged from the unfused path")
+    loss_delta = abs(float(mets_fused["loss"][-1])
+                     - float(mets_f32["loss"][-1]))
+    assert loss_delta <= WIRE_MERGE_TOL, (
+        f"fused int8 final loss drifted {loss_delta} from f32")
+
+    # fallback byte-identity: policies outside the fused capability
+    # (f32 identity, bf16 moments) must compile the PR-9 engine verbatim
+    # whether the dispatch default (auto) or an explicit off is used
+    for pol in (None, "moments=bf16"):
+        _, fin_a, mets_a, _ = clock(pol, None)
+        _, fin_b, mets_b, _ = clock(pol, False)
+        for a, b in zip(jax.tree.leaves(fin_a), jax.tree.leaves(fin_b)):
+            assert np.array_equal(np.asarray(a), np.asarray(b)), (
+                f"fused auto-dispatch perturbed the fallback path {pol}")
+        for k in mets_a:
+            assert np.array_equal(np.asarray(mets_a[k]),
+                                  np.asarray(mets_b[k])), (pol, k)
+
+    return {"backend": jax.default_backend(),
+            "model_size": {"m": big["m"], "D": spec_big.width},
+            "bench_size": {"m": m, "rounds": rounds,
+                           "local_steps": local_steps},
+            "moment_traffic_bytes_per_round": {
+                "fused": tr_fused["bytes_per_round"],
+                "unfused": tr_unfused["bytes_per_round"]},
+            "moment_traffic_ratio": round(traffic_ratio, 4),
+            "resident_peak_bytes": {"fused": rb_fused["peak"],
+                                    "unfused": rb_unfused["peak"]},
+            "transient_bytes": {"fused": rb_fused["transient_bytes"],
+                                "unfused": rb_unfused["transient_bytes"]},
+            "us_per_round": {"f32": round(us_f32, 1),
+                             "int8_fused": round(us_fused, 1),
+                             "int8_unfused": round(us_unf, 1)},
+            "measured_bytes_accessed_per_segment": {
+                "int8_fused": ba_fused, "int8_unfused": ba_unf},
+            "final_loss": {
+                "f32": round(float(mets_f32["loss"][-1]), 5),
+                "int8_fused": round(float(mets_fused["loss"][-1]), 5),
+                "int8_unfused": round(float(mets_unf["loss"][-1]), 5)},
+            "loss_delta_vs_f32": round(loss_delta, 5),
+            "quality_tol": WIRE_MERGE_TOL,
+            "fused_vs_unfused_bit_identical": True,
+            "fallback_bit_identical": True}
 
 
 def bench_telemetry(m=8, d_model=128, layers=2, vocab=256, rounds=8,
@@ -756,6 +918,15 @@ def main():
               f"{hl['max_agents_at_budget']} vs "
               f"{r['rows']['int8_ef_f32']['max_agents_at_budget']}), "
               f"loss_delta={hl['loss_delta_vs_f32']}", flush=True)
+        out["residency_fused"] = bench_residency_fused()
+        rf = out["residency_fused"]
+        tb = rf["moment_traffic_bytes_per_round"]
+        print(f"residency_fused: moment traffic "
+              f"{tb['unfused']}B -> {tb['fused']}B per round "
+              f"({rf['moment_traffic_ratio']}x less), "
+              f"fused==unfused bits: "
+              f"{rf['fused_vs_unfused_bit_identical']}, "
+              f"loss_delta_vs_f32={rf['loss_delta_vs_f32']}", flush=True)
     if args.checkpoint:
         out["checkpoint"] = bench_checkpoint(
             **{k: v for k, v in SIZES["default"].items() if k != "rounds"})

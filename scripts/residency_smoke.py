@@ -9,6 +9,17 @@ SMALLER per-agent resident footprint than the baseline.
 
     python scripts/residency_smoke.py results/residency_smoke/f32 \
         results/residency_smoke/int8 [--tol 0.05]
+
+``--fused-pair`` flips the comparison to a ``--fused-moments off`` vs
+``--fused-moments on`` pair at matched seeds AND matched residency
+policy: final evals must agree within the same tolerance (the fused
+kernel is trajectory-preserving, so the delta should in fact be 0),
+the STORED footprint must be identical, and the fused run's recorded
+``transient_bytes`` must be strictly smaller (the f32 decode views the
+kernel eliminates).
+
+    python scripts/residency_smoke.py results/fused_smoke/off \
+        results/fused_smoke/on --fused-pair
 """
 import argparse
 import glob
@@ -36,28 +47,40 @@ def _final_eval(rec, outdir):
     return evals[-1]
 
 
-def _resident_bytes(outdir):
+def _round_field(outdir, field, default=None):
     for path in glob.glob(os.path.join(outdir, "events_*.jsonl")):
         with open(path) as f:
             for line in f:
                 ev = json.loads(line)
-                if ev.get("type") == "round" and ev.get("resident_bytes"):
-                    return ev["resident_bytes"]
-    return None
+                if ev.get("type") == "round" and ev.get(field) is not None:
+                    return ev[field]
+    return default
+
+
+def _resident_bytes(outdir):
+    return _round_field(outdir, "resident_bytes") or None
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("baseline", help="f32 run output dir")
-    ap.add_argument("residency", help="--residency run output dir")
+    ap.add_argument("baseline", help="f32 run output dir "
+                    "(--fused-pair: the --fused-moments off run)")
+    ap.add_argument("residency", help="--residency run output dir "
+                    "(--fused-pair: the --fused-moments on run)")
     ap.add_argument("--tol", type=float, default=TOL)
+    ap.add_argument("--fused-pair", action="store_true",
+                    help="compare a fused-off vs fused-on pair sharing a "
+                    "residency policy instead of f32 vs quantized")
     args = ap.parse_args(argv)
 
     base, res = _load_run(args.baseline), _load_run(args.residency)
     pol = res["args"].get("residency")
     if not pol:
         raise SystemExit(f"{args.residency}: run carried no residency policy")
-    for k in ("seed", "rounds", "agents", "schedule", "merge"):
+    matched = ("seed", "rounds", "agents", "schedule", "merge")
+    if args.fused_pair:
+        matched += ("residency",)
+    for k in matched:
         if base["args"].get(k) != res["args"].get(k):
             raise SystemExit(f"runs are not matched on --{k}: "
                              f"{base['args'].get(k)} vs {res['args'].get(k)}")
@@ -66,13 +89,30 @@ def main(argv=None):
     delta = abs(er - eb)
     rb_base = _resident_bytes(args.baseline)
     rb_res = _resident_bytes(args.residency)
-    print(f"final merged eval: f32={eb:.4f} {pol}={er:.4f} "
-          f"delta={delta:.4f} (tol {args.tol})")
-    if rb_base and rb_res:
-        print(f"resident bytes/agent: f32={rb_base} {pol}={rb_res} "
-              f"({rb_base / rb_res:.2f}x)")
-        if rb_res >= rb_base:
-            raise SystemExit("residency run did not shrink resident bytes")
+    if args.fused_pair:
+        print(f"final merged eval: unfused={eb:.4f} fused={er:.4f} "
+              f"delta={delta:.4f} (tol {args.tol})")
+        tb_base = _round_field(args.baseline, "transient_bytes")
+        tb_res = _round_field(args.residency, "transient_bytes")
+        if rb_base != rb_res:
+            raise SystemExit("fused run changed the STORED footprint: "
+                             f"{rb_base} vs {rb_res}")
+        if tb_base is None or tb_res is None:
+            raise SystemExit("round events carry no transient_bytes "
+                             "(schema v3) — cannot check the fused saving")
+        print(f"transient bytes/agent: unfused={tb_base} fused={tb_res}")
+        if not tb_res < tb_base:
+            raise SystemExit("fused run did not shrink transient decode "
+                             f"traffic: {tb_res} vs {tb_base}")
+    else:
+        print(f"final merged eval: f32={eb:.4f} {pol}={er:.4f} "
+              f"delta={delta:.4f} (tol {args.tol})")
+        if rb_base and rb_res:
+            print(f"resident bytes/agent: f32={rb_base} {pol}={rb_res} "
+                  f"({rb_base / rb_res:.2f}x)")
+            if rb_res >= rb_base:
+                raise SystemExit("residency run did not shrink resident "
+                                 "bytes")
     if delta > args.tol:
         raise SystemExit(f"quantized-residency eval drifted: {delta:.4f} > "
                          f"{args.tol}")

@@ -180,20 +180,77 @@ def _atomic_write(path: str, blob: bytes) -> None:
     os.replace(tmp, path)
 
 
-def save(path: str, tree, meta=None) -> None:
+# reserved meta key recording the residency policy whose stored-layout
+# panels the blob carries ({kind: storage name}); written only when the
+# caller passes residency=, so user meta dicts round-trip untouched
+RESIDENCY_META_KEY = "_residency_policy"
+
+
+def _stamp_residency(meta, residency):
+    if residency is None:
+        return meta
+    meta = dict(meta) if meta else {}
+    meta[RESIDENCY_META_KEY] = {str(k): str(v)
+                                for k, v in dict(residency).items()}
+    return meta
+
+
+def check_residency(meta, expected) -> None:
+    """Refuse a stored-layout restore under the wrong residency policy.
+
+    A v2 blob's quantized panels are raw int8 codes + scales; rebuilding
+    them into an engine whose ``--residency`` names a DIFFERENT storage
+    would decode those bits with the wrong codec (or, structure
+    permitting, treat them as plain arrays) and silently corrupt the
+    trajectory. Compares the blob's recorded policy against
+    ``expected`` ({kind: storage name}) over the union of kinds (a kind
+    absent from a policy is the f32 identity) and raises ValueError
+    naming every mismatched kind. Blobs predating the stamp (no
+    recorded policy) pass — structure drift still trips ``_rebuild``'s
+    keyed errors."""
+    if expected is None:
+        return
+    recorded = (meta or {}).get(RESIDENCY_META_KEY)
+    if recorded is None:
+        return
+    expected = {str(k): str(v) for k, v in dict(expected).items()}
+    bad = []
+    for kind in sorted(set(recorded) | set(expected)):
+        got = recorded.get(kind, "f32")
+        want = expected.get(kind, "f32")
+        if got != want:
+            bad.append(f"{kind}: checkpoint stores '{got}', engine "
+                       f"configured '{want}'")
+    if bad:
+        raise ValueError(
+            "checkpoint residency policy does not match the engine's "
+            "--residency; restoring would decode stored panels with the "
+            "wrong codec (" + "; ".join(bad) + ")")
+
+
+def save(path: str, tree, meta=None, residency=None) -> None:
     """Atomic single-file save (versioned format; ``meta`` is any
-    JSON-serializable host-side dict riding next to the arrays)."""
-    blob, _ = _pack_blob(_flatten_to_host(tree), meta)
+    JSON-serializable host-side dict riding next to the arrays).
+    ``residency`` ({kind: storage name}) stamps the policy whose
+    stored-layout panels the blob carries, enabling the restore-side
+    mismatch guard (:func:`check_residency`)."""
+    blob, _ = _pack_blob(_flatten_to_host(tree),
+                         _stamp_residency(meta, residency))
     _atomic_write(path, blob)
 
 
-def restore(path: str, like, with_meta: bool = False):
+def restore(path: str, like, with_meta: bool = False,
+            expect_residency=None):
     """Rebuild ``like``'s structure from a checkpoint file (writable
     arrays). Raises CheckpointCorruptError on torn/corrupt files,
-    KeyError/ValueError naming the offending key on structure drift."""
+    KeyError/ValueError naming the offending key on structure drift;
+    ``expect_residency`` ({kind: storage name}) additionally refuses a
+    blob stamped with a different residency policy
+    (:func:`check_residency`)."""
     with open(path, "rb") as f:
         raw = f.read()
     flat, meta = _unpack_blob(raw)
+    check_residency(meta, expect_residency)
     tree = _rebuild(flat, like)
     return (tree, meta) if with_meta else tree
 
@@ -219,7 +276,7 @@ class Checkpointer:
     """
 
     def __init__(self, directory: str, keep: int = 3, fingerprint=None,
-                 events=None):
+                 events=None, residency=None):
         self.directory = os.path.abspath(directory)
         os.makedirs(self.directory, exist_ok=True)
         self.keep = int(keep)
@@ -227,6 +284,9 @@ class Checkpointer:
             raise ValueError(f"keep must be >= 1, got {keep}")
         self.fingerprint = fingerprint
         self.events = events
+        # {kind: storage name} of the run's residency policy: stamped
+        # into every save's meta and enforced by restore_latest
+        self.residency = dict(residency) if residency else None
         self._thread = None
         self._error = None
         self._manifest = self._load_manifest()
@@ -275,7 +335,7 @@ class Checkpointer:
 
     def _commit(self, step, flat, meta):
         t0 = time.perf_counter()
-        blob, crc = _pack_blob(flat, meta)
+        blob, crc = _pack_blob(flat, _stamp_residency(meta, self.residency))
         fname = f"step_{step:08d}.ckpt"
         _atomic_write(os.path.join(self.directory, fname), blob)
         if self.events is not None:  # sidecar-only (emit_op is thread-safe)
@@ -319,7 +379,11 @@ class Checkpointer:
         Scans the manifest plus any on-disk ``step_*.ckpt`` orphans
         (e.g. a checkpoint whose manifest update was lost), newest
         first; a corrupt/torn file warns (RuntimeWarning) and falls back
-        to the previous one."""
+        to the previous one. A residency-policy mismatch
+        (:func:`check_residency` against this Checkpointer's
+        ``residency``) raises instead of falling back: every sibling
+        checkpoint carries the same stamp, and silently resuming from an
+        older blob would hide the misconfiguration."""
         self.wait()
         cands = {c["file"]: c["step"]
                  for c in self._manifest["checkpoints"]}
@@ -334,7 +398,8 @@ class Checkpointer:
         for fn, step in sorted(cands.items(), key=lambda kv: -kv[1]):
             path = os.path.join(self.directory, fn)
             try:
-                tree, meta = restore(path, like, with_meta=True)
+                tree, meta = restore(path, like, with_meta=True,
+                                     expect_residency=self.residency)
             except FileNotFoundError:
                 continue
             except CheckpointCorruptError as exc:

@@ -35,6 +35,7 @@ import jax.numpy as jnp
 from repro import merging as merging_mod
 from repro import residency as residency_mod
 from repro import wire as wire_mod
+from repro.kernels import opt_fused as opt_fused_mod
 from repro.core import gossip
 from repro.core import panel as panel_mod
 from repro.core.consensus import consensus_distance_tree
@@ -330,6 +331,69 @@ def _opt_write(opt, sts, mom_keys, key, spec, *, use_pallas: bool = False,
     return out
 
 
+def _fused_opt_update(gpan, opt, pan, optimizer, sts, spec, key, *,
+                      use_pallas: bool = False, interpret: bool = True):
+    """Fused moment update: the stored int8 groups run the single-sweep
+    Pallas kernel (kernels/opt_fused.py) — decode, the optimizer's
+    shared elementwise core, and the SR re-encode all in VMEM, HBM
+    touching only int8 q + scales. No f32 moment view is ever
+    materialized, which is both the bandwidth win and the peak-memory
+    fix (resident_bytes_model's ``transient_bytes`` term is zero on
+    this path).
+
+    Groups without a storage entry (non-f32 dtype groups) take the
+    legacy vmapped ``optimizer.update`` on their rest-subtree — same
+    expression, same step_count bookkeeping, bit-identical to the
+    unfused engine. SR keys replicate ``_opt_write``'s folds exactly
+    (fold_in(key, i) over sorted present moment entries, then
+    ``storage_keys``'s sorted-group fold), so the fused ref path is the
+    unfused decode->update->encode composition bit-for-bit.
+
+    lr/bc1/bc2 come from ``optimizer.hyper`` on the per-agent (m,)
+    step_count — agent rows diverge after a RESYNC re-init, so the bias
+    corrections ride the kernel as (m, 1) columns."""
+    from repro.wire.codec import _uniform
+    count = opt["step_count"] + 1
+    lr, bc1, bc2 = optimizer.hyper(count)
+    present = sorted(k for k in opt if k in optimizer.moment_keys)
+    gkeys = {k: residency_mod.storage_keys(
+        sts, None if key is None else jax.random.fold_in(key, i))
+        for i, k in enumerate(present)}
+    rest = [k for k in pan if k not in sts]
+    new_pan, new_m, new_v = {}, {}, {}
+    if rest:
+        sub = lambda d: {k: d[k] for k in rest}
+        opt_r = {k: (sub(v) if k in optimizer.moment_keys else v)
+                 for k, v in opt.items()}
+        pan_r, opt_r = jax.vmap(optimizer.update)(
+            sub(gpan), opt_r, sub(pan))
+        new_pan.update(pan_r)
+        new_m.update(opt_r["m"])
+        new_v.update(opt_r["v"])
+    for k in pan:
+        if k not in sts:
+            continue
+        st = sts[k]
+        um = _uniform(gkeys["m"][k], gpan[k].shape)
+        uv = _uniform(gkeys["v"][k], gpan[k].shape)
+        p2, qm2, sm2, qv2, sv2 = opt_fused_mod.adamw_fused_int8(
+            gpan[k], pan[k],
+            opt["m"][k]["q"], opt["m"][k]["scale"],
+            opt["v"][k]["q"], opt["v"][k]["scale"],
+            um, uv, lr, bc1, bc2, group=st.group, core=optimizer.core,
+            transform_fwd=st.transform_fwd, transform_inv=st.transform_inv,
+            use_pallas=use_pallas, interpret=interpret)
+        new_pan[k] = p2
+        new_m[k] = _res_constrain({"q": qm2, "scale": sm2}, spec, k)
+        new_v[k] = _res_constrain({"q": qv2, "scale": sv2}, spec, k)
+    new_pan = {k: new_pan[k] for k in pan}
+    new_opt = dict(opt)
+    new_opt["m"] = {k: new_m[k] for k in opt["m"]}
+    new_opt["v"] = {k: new_v[k] for k in opt["v"]}
+    new_opt["step_count"] = count
+    return new_pan, new_opt
+
+
 def _wire_needs_ef(spec) -> bool:
     return any(wire_mod.get_codec(name).error_feedback
                for _, name in spec.wire)
@@ -524,6 +588,7 @@ def make_panel_segment(loss_fn: Callable, optimizer: Optimizer,
                        monitor: bool = True, telemetry: bool = False,
                        use_pallas: bool = False,
                        interpret: bool = True, donate: bool = True,
+                       fused=None,
                        param_shardings=None, in_shardings=None):
     """Donated, scanned panel driver: one dispatch per SCHEDULE SEGMENT.
 
@@ -691,6 +756,20 @@ def make_panel_segment(loss_fn: Callable, optimizer: Optimizer,
                                         for s in res_err.values())
     res_pallas = panel_mod._pallas_ok(use_pallas, spec)
     mom_keys = tuple(optimizer.moment_keys)
+    # fused moment update (kernels/opt_fused.py): None auto-enables
+    # whenever the policy/optimizer qualify (grouped int8 moments +
+    # optimizer.core), True requires it, False forces the unfused
+    # decode->update->encode. The fused ref path is the unfused
+    # composition bit-for-bit, so auto-on is trajectory-preserving.
+    fused_ok = tmetrics.fused_moments_auto(spec, optimizer)
+    if fused and not fused_ok:
+        raise ValueError(
+            "fused=True but the fused moment update does not apply: it "
+            "needs a grouped-int8 moments storage (fused_update "
+            f"capability; policy has '{spec.residency_of('moments')}') "
+            "and an optimizer exposing core/hyper with (m, v) moments "
+            f"(got '{optimizer.name}')")
+    res_fused = fused_ok if fused is None else bool(fused)
     if telemetry:
         # host constants of the exact codec cost model, baked into the
         # traced wire_bytes column
@@ -791,6 +870,14 @@ def make_panel_segment(loss_fn: Callable, optimizer: Optimizer,
                     if not res_mom:
                         new_pan, new_opt = jax.vmap(optimizer.update)(
                             gpan, opt, pan)
+                    elif res_fused:
+                        # single-sweep fused kernel: no f32 moment view
+                        # ever hits HBM; same SR key folds as the
+                        # unfused branch below, so trajectories match
+                        new_pan, new_opt = _fused_opt_update(
+                            gpan, opt, pan, optimizer, res_mom, spec,
+                            _res_key(r, "moments", res_mom_key),
+                            use_pallas=res_pallas, interpret=interpret)
                     else:
                         # moment storage fusion: decode -> update ->
                         # re-encode inside the SAME donated step (the f32

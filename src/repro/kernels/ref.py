@@ -228,3 +228,36 @@ def ties_colmerge_ref(tau, thresh):
     cnt = jnp.sum(agree.astype(jnp.float32), axis=0)
     dev = jnp.sum(jnp.where(agree, tk, 0.0), axis=0)
     return jnp.where(cnt > 0.0, dev / jnp.maximum(cnt, 1.0), 0.0)
+
+
+def adamw_fused_int8_ref(g, p, qm, sm, qv, sv, um, uv, lr, bc1, bc2, *,
+                         group: int = 128, transform_fwd=None,
+                         transform_inv=None, core=None):
+    """Oracle for kernels/opt_fused.py: fused int8 Adam moment update.
+
+    Decodes the companded int8 moments (dequant -> inverse transform),
+    runs the shared elementwise optimizer ``core`` (optim.Optimizer.core
+    — the exact expression the pytree path executes), then re-encodes
+    the new moments (forward transform -> fresh grouped scales ->
+    stochastic floor with the supplied uniforms). By construction this
+    is the unfused decode->update->encode composition on the ref path,
+    so fused-off and fused-on-ref trajectories are bit-identical.
+
+    g, p: (m, D) f32 grads/params; qm, qv: (m, D) int8; sm, sv:
+    (m, ceil(D/group)) f32 scales; um, uv: (m, D) uniforms in [0, 1);
+    lr, bc1, bc2: broadcastable to (m, D) — (m, 1) columns carry the
+    per-agent step_count divergence after RESYNC.
+    Returns (p_new, qm_new, sm_new, qv_new, sv_new).
+    """
+    fwd = transform_fwd if transform_fwd is not None else (lambda x: x)
+    inv = transform_inv if transform_inv is not None else (lambda z: z)
+    m_dec = inv(dequantize_int8_grouped_ref(qm, sm, group=group))
+    v_dec = inv(dequantize_int8_grouped_ref(qv, sv, group=group))
+    p_new, m_new, v_new = core(g, m_dec, v_dec, p, lr=lr, bc1=bc1, bc2=bc2)
+    zm = fwd(m_new)
+    zv = fwd(v_new)
+    sm_new = int8_group_scale_ref(zm, group=group)
+    qm_new = quantize_int8_grouped_ref(zm, sm_new, um, group=group)
+    sv_new = int8_group_scale_ref(zv, group=group)
+    qv_new = quantize_int8_grouped_ref(zv, sv_new, uv, group=group)
+    return p_new, qm_new, sm_new, qv_new, sv_new

@@ -53,7 +53,8 @@ from repro.data.synthetic import SyntheticLM, make_agent_lm_batches
 from repro.launch import mesh as mesh_mod
 from repro.models import build_model
 from repro.optim import make_optimizer
-from repro.telemetry.metrics import resident_bytes_model
+from repro.residency import parse_policy
+from repro.telemetry.metrics import fused_moments_auto, resident_bytes_model
 
 
 def build_mesh(kind: str, preset: str, cfg):
@@ -136,6 +137,17 @@ def main():
                          "HBM ~4x per moment panel (stochastic rounding, "
                          "per-row scales; int8g = grouped scales). Empty/"
                          "f32 = the bit-exact pre-residency engine")
+    ap.add_argument("--fused-moments", default="auto",
+                    choices=["auto", "on", "off"],
+                    help="fused int8 moment update (kernels/opt_fused.py):"
+                         " decode, AdamW core and stochastic re-encode in "
+                         "one kernel sweep, no transient f32 moment view "
+                         "in HBM (~4x less moment traffic per local "
+                         "step). auto = on whenever the --residency "
+                         "moments storage is grouped int8 and the "
+                         "optimizer exposes a fused core; the fused path "
+                         "is trajectory-identical to the unfused one, so "
+                         "'off' is a debugging/measurement switch")
     ap.add_argument("--merge", default="uniform",
                     choices=sorted(merging_mod.MERGERS),
                     help="merge operator applied on global rounds "
@@ -271,9 +283,12 @@ def main():
 
     ckpt = None
     if args.checkpoint_every or args.resume:
+        # the residency stamp guards --resume against decoding a v2
+        # blob's stored-layout panels with a different --residency
         ckpt = Checkpointer(
             args.checkpoint_dir or os.path.join(args.out, "ckpt_" + tag),
-            keep=args.checkpoint_keep, fingerprint=run_cfg)
+            keep=args.checkpoint_keep, fingerprint=run_cfg,
+            residency=parse_policy(args.residency or None))
 
     key = jax.random.PRNGKey(args.seed)
     state, spec = dsgd.init_panel_state(model.init_params, opt, m, key,
@@ -283,14 +298,20 @@ def main():
     print(f"wire codec {args.wire}: {spec.wire_payload_bytes} B/agent "
           f"payload ({spec.wire_total_bytes} B with scales/indices) per "
           f"full-panel exchange; merge operator {spec.merger}")
-    res_bytes = resident_bytes_model(spec, opt)
+    fused = {"auto": None, "on": True, "off": False}[args.fused_moments]
+    fused_active = fused_moments_auto(spec, opt) if fused is None else fused
+    res_bytes = resident_bytes_model(spec, opt, fused=fused_active)
     print(f"residency {args.residency or 'f32'}: "
           f"{res_bytes['total']} B/agent resident "
           f"(params {res_bytes['params']}, moments {res_bytes['moments']}, "
           f"wire_err {res_bytes['wire_err']}, "
-          f"merge_stat {res_bytes['merge_stat']})")
+          f"merge_stat {res_bytes['merge_stat']}); "
+          f"peak {res_bytes['peak']} B/agent "
+          f"(+{res_bytes['transient_bytes']} transient); "
+          f"fused moments {'on' if fused_active else 'off'}")
     segment_fn = dsgd.make_panel_segment(model.loss_fn, opt,
                                          args.local_steps, spec,
+                                         fused=fused,
                                          telemetry=args.telemetry)
 
     lm = SyntheticLM(vocab=cfg.vocab_size, num_domains=8, seed=args.seed)
@@ -459,7 +480,8 @@ def main():
                 grad_norm_max=float(mets["grad_norm_max"][s]),
                 consensus=float(mets["consensus"][s]),
                 comm_cost_P=float(comm_after[s]),
-                resident_bytes=int(res_bytes["total"]), **extra)
+                resident_bytes=int(res_bytes["total"]),
+                transient_bytes=int(res_bytes["transient_bytes"]), **extra)
             if glob_host[s]:
                 log.emit("merge", round=r, operator=spec.merger)
             # eval is measured once per segment (at its end); intermediate

@@ -52,6 +52,16 @@ class Optimizer:
     # keys through the storage view — ``update`` itself always sees the
     # decoded panels, so optimizers stay storage-agnostic.
     moment_keys: tuple = ()
+    # elementwise update math, (g, m, v, p, *, lr, bc1, bc2) ->
+    # (p, m, v), shared verbatim by ``update`` and the fused Pallas
+    # kernel (kernels/opt_fused.py) so both paths run the identical
+    # floating-point expression. None when no fused form exists.
+    core: Callable = None
+    # (count, step=None) -> (lr, bc1, bc2) hyperparameter schedule,
+    # mirroring ``update``'s step bookkeeping; accepts vector counts so
+    # the fused path can feed per-agent step_count rows (they diverge
+    # after RESYNC).
+    hyper: Callable = None
 
 
 def sgd(schedule, momentum: float = 0.0, weight_decay: float = 0.0,
@@ -83,6 +93,24 @@ def sgd(schedule, momentum: float = 0.0, weight_decay: float = 0.0,
                      moment_keys=("mu",) if momentum else ())
 
 
+def adamw_core(g, m, v, p, *, lr, bc1, bc2, b1=0.9, b2=0.999, eps=1e-8,
+               weight_decay: float = 0.0):
+    """Elementwise AdamW step: (grad, moments, param) -> (param, moments).
+
+    Pure jnp arithmetic on same-shape arrays (``lr``/``bc1``/``bc2``
+    broadcast — scalars on the tree path, (m, 1) per-agent columns in the
+    fused kernel). Both the pytree ``update`` and the fused int8 kernel
+    call exactly this function, so the two paths are the same
+    floating-point expression by construction.
+    """
+    m = b1 * m + (1 - b1) * g
+    v = b2 * v + (1 - b2) * jnp.square(g)
+    mhat = m / bc1
+    vhat = v / bc2
+    p = p - lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p)
+    return p, m, v
+
+
 def adamw(schedule, b1=0.9, b2=0.999, eps=1e-8,
           weight_decay: float = 0.0) -> Optimizer:
     sched = schedule if callable(schedule) else constant_schedule(schedule)
@@ -92,28 +120,28 @@ def adamw(schedule, b1=0.9, b2=0.999, eps=1e-8,
                 "v": jax.tree.map(jnp.zeros_like, params),
                 "step_count": jnp.zeros((), jnp.int32)}
 
-    def update(grads, state, params, step=None):
-        count = state["step_count"] + 1
+    def core(g, m, v, p, *, lr, bc1, bc2):
+        return adamw_core(g, m, v, p, lr=lr, bc1=bc1, bc2=bc2, b1=b1, b2=b2,
+                          eps=eps, weight_decay=weight_decay)
+
+    def hyper(count, step=None):
         step = count if step is None else step + 1
         lr = sched(step - 1)
-        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"],
-                         grads)
-        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g),
-                         state["v"], grads)
         c = count.astype(jnp.float32)
-        bc1 = 1 - b1 ** c
-        bc2 = 1 - b2 ** c
+        return lr, 1 - b1 ** c, 1 - b2 ** c
 
-        def upd(p, m_, v_):
-            mhat = m_ / bc1
-            vhat = v_ / bc2
-            return p - lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p)
-
-        new_params = jax.tree.map(upd, params, m, v)
+    def update(grads, state, params, step=None):
+        count = state["step_count"] + 1
+        lr, bc1, bc2 = hyper(count, step)
+        res = jax.tree.map(
+            lambda g, m_, v_, p: core(g, m_, v_, p, lr=lr, bc1=bc1, bc2=bc2),
+            grads, state["m"], state["v"], params)
+        new_params, m, v = jax.tree.transpose(
+            jax.tree.structure(params), jax.tree.structure((0, 0, 0)), res)
         return new_params, {"m": m, "v": v, "step_count": count}
 
     return Optimizer(init=init, update=update, name="adamw",
-                     moment_keys=("m", "v"))
+                     moment_keys=("m", "v"), core=core, hyper=hyper)
 
 
 def make_optimizer(name: str, lr, total_steps: int = 1000,

@@ -84,6 +84,12 @@ class Storage:
 
     name = "f32"
     needs_key = False  # write() draws stochastic-rounding bits from key=
+    # whether the stored rep supports the fused in-VMEM optimizer update
+    # (kernels/opt_fused.py): decode->update->re-encode without an HBM
+    # f32 view. Requires block-local re-scaling, i.e. GROUPED scales —
+    # per-row scales need a full-D amax pass, so only grouped int8
+    # qualifies; everything else keeps the unfused path.
+    fused_update = False
 
     # ------------------------------------------------------------ codec
     def init(self, x):
@@ -189,6 +195,9 @@ class Int8Storage(Storage):
         self.name = name
         self.group = group
         self.transform = transform
+        # grouped scales are block-local in the fused kernel's grid, so
+        # the re-encode can compute them in-VMEM; per-row scales can't
+        self.fused_update = group is not None
 
     def transform_fwd(self, x):
         if self.transform is None:

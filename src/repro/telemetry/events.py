@@ -39,7 +39,12 @@ from typing import Callable, Dict, List, Optional
 # per-agent resident-HBM cost of the run's residency policy
 # (metrics.resident_bytes_model), a host constant stamped on every
 # round. v1 streams (no such field) still validate.
-SCHEMA_VERSION = 2
+# v3: 'round' gains the optional 'transient_bytes' field — the in-round
+# peak of the f32 decode views the unfused storage path materializes
+# (zero when the fused moment kernel is active); 'resident_bytes' stays
+# the STORED total, so peak per-agent HBM is the sum of the two. Older
+# streams still validate.
+SCHEMA_VERSION = 3
 
 # Field types: int / float / str / bool / dict / id (int-or-str) /
 # list[float] / list[int]; a '?' prefix marks the field optional.
@@ -56,6 +61,9 @@ EVENT_SCHEMAS: Dict[str, Dict[str, str]] = {
         "wire_bytes": "?list[int]",
         # per-agent resident HBM bytes under the residency policy (v2)
         "resident_bytes": "?int",
+        # per-agent transient f32 decode-view bytes of the unfused
+        # storage path; 0 under the fused moment kernel (v3)
+        "transient_bytes": "?int",
     },
     "merge": {"round": "int", "operator": "str"},
     "eval": {"round": "int", "merged_eval": "float", "local_eval": "float"},

@@ -111,10 +111,20 @@ class Histogram:
         return out
 
     def merge(self, other: "Histogram") -> "Histogram":
-        if len(other.bounds) != len(self.bounds) or not np.all(
-                other.bounds == self.bounds):
-            raise ValueError("cannot merge histograms with different "
-                             "bucket ladders")
+        # adding counts bucket-by-bucket is only meaningful on identical
+        # ladders: merging a custom-``bounds`` snapshot into a default
+        # one would silently mis-bin every sample, so refuse loudly and
+        # name the first divergence
+        if len(other.bounds) != len(self.bounds):
+            raise ValueError(
+                "cannot merge histograms with different bucket ladders: "
+                f"{len(self.bounds)} bounds vs {len(other.bounds)}")
+        if not np.all(other.bounds == self.bounds):
+            i = int(np.argmax(other.bounds != self.bounds))
+            raise ValueError(
+                "cannot merge histograms with different bucket ladders: "
+                f"bounds diverge at index {i} "
+                f"({self.bounds[i]!r} vs {other.bounds[i]!r})")
         self.counts += other.counts
         self.n += other.n
         self.total += other.total

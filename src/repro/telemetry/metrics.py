@@ -80,14 +80,34 @@ def wire_bytes_model(spec, wire_dtype=None):
     return spec.wire_total_bytes, bytes_full
 
 
-def resident_bytes_model(spec, optimizer=None, wire_dtype=None):
+def fused_moments_auto(spec, optimizer) -> bool:
+    """Whether the fused in-VMEM moment update (kernels/opt_fused.py)
+    applies to this spec+optimizer — the single eligibility predicate
+    the segment driver, the accounting models and the launcher all
+    consult. True iff the moments policy storage advertises
+    ``fused_update`` (grouped int8), the optimizer exposes the shared
+    elementwise ``core``/``hyper`` with the (m, v) moment layout the
+    kernel hardcodes, and the spec has an f32 group for the policy to
+    act on."""
+    from repro import residency as residency_mod
+    if optimizer is None or optimizer.core is None or optimizer.hyper is None:
+        return False
+    if tuple(optimizer.moment_keys) != ("m", "v"):
+        return False
+    st = residency_mod.get_storage(spec.residency_of("moments"))
+    if not (getattr(st, "fused_update", False) and st.needs_key):
+        return False
+    return any(g == "float32" for g, _ in spec.groups)
+
+
+def resident_bytes_model(spec, optimizer=None, wire_dtype=None, fused=None):
     """Host-side exact per-agent resident HBM bytes of the engine's
     panel state under the spec's residency policy — the storage-codec
     counterpart of :func:`wire_bytes_model`.
 
-    Returns ``{"params", "moments", "wire_err", "merge_stat", "total"}``
-    in bytes per agent, scale sidecars included
-    (:meth:`PanelSpec.storage_bytes`). Moments count
+    Returns ``{"params", "moments", "wire_err", "merge_stat", "total",
+    "transient_bytes", "peak"}`` in bytes per agent, scale sidecars
+    included (:meth:`PanelSpec.storage_bytes`). Moments count
     ``optimizer.moment_keys`` panels (AdamW's two when ``optimizer`` is
     None) and mirror each group's native dtype, so only f32 groups pay
     the storage codec; the wire-error residual exists only when the wire
@@ -95,8 +115,20 @@ def resident_bytes_model(spec, optimizer=None, wire_dtype=None):
     which disables EF, zeroes it); merge statistics count the spec
     merger's ``stat_panels``. This model is pinned exact against
     ``jax.eval_shape`` of the real state by the residency conformance
-    tests."""
+    tests.
+
+    ``total`` is the STORED footprint that persists across the whole
+    segment. ``transient_bytes`` is the in-round peak of the f32 decode
+    views the unfused path materializes for non-f32 stored panels
+    (moments each local step, stats at round entry, the EF residual
+    inside the communicating branches) — the term the pre-fusion
+    accounting silently dropped, understating peak HBM. The moments
+    term is zero when the fused kernel is active (``fused=None`` infers
+    :func:`fused_moments_auto`; pass the launcher's resolved flag to
+    pin it). ``peak = total + transient_bytes`` is what capacity
+    planning (agents-per-HBM-budget) must use for the unfused engine."""
     from repro import merging as merging_mod
+    from repro import residency as residency_mod
     from repro import wire as wire_mod
     params = sum(jnp.dtype(k).itemsize * w for k, w in spec.groups)
     n_mom = 2 if optimizer is None else len(optimizer.moment_keys)
@@ -112,7 +144,62 @@ def resident_bytes_model(spec, optimizer=None, wire_dtype=None):
     out = {"params": params, "moments": moments, "wire_err": wire_err,
            "merge_stat": merge_stat}
     out["total"] = sum(out.values())
+    if fused is None:
+        fused = fused_moments_auto(spec, optimizer)
+    f32_w = sum(w for g, w in spec.groups if g == "float32")
+    all_w = sum(w for _, w in spec.groups)
+    transient = 0
+    if not fused and residency_mod.get_storage(
+            spec.residency_of("moments")).name != "f32":
+        transient += n_mom * 4 * f32_w
+    if needs_ef and residency_mod.get_storage(
+            spec.residency_of("wire_err")).name != "f32":
+        transient += 4 * all_w
+    if merger.stat_panels and residency_mod.get_storage(
+            spec.residency_of("stats")).name != "f32":
+        transient += len(merger.stat_panels) * 4 * all_w
+    out["transient_bytes"] = transient
+    out["peak"] = out["total"] + transient
     return out
+
+
+def moment_traffic_model(spec, optimizer=None, local_steps: int = 1,
+                         fused=None):
+    """Host-side per-agent HBM bytes MOVED per round by the optimizer
+    moment panels — the bandwidth counterpart of
+    :func:`resident_bytes_model` (which counts bytes held).
+
+    Every local step, each moment panel pays a stored-rep read + write
+    (both paths). The unfused path additionally round-trips a
+    materialized f32 view per stored panel: decode write + update
+    read + update write + encode read = 16 bytes/scalar of transient
+    traffic on top of the ~2 bytes/scalar the int8 rep itself moves —
+    the gap the fused kernel closes. Uniform SR-input traffic is
+    identical in both paths (both draw the same (m, D) panels from the
+    same keys) so it cancels from the comparison; the TPU-native
+    variant draws its bits on-chip (wire_quant.quantize_int8_panel_
+    native) and pays it in neither.
+
+    Returns ``{"stored_bytes_per_step", "transient_bytes_per_step",
+    "bytes_per_step", "bytes_per_round"}``."""
+    from repro import residency as residency_mod
+    n_mom = 2 if optimizer is None else len(optimizer.moment_keys)
+    st = residency_mod.get_storage(spec.residency_of("moments"))
+    if fused is None:
+        fused = fused_moments_auto(spec, optimizer)
+    stored = transient = 0
+    for g, w in spec.groups:
+        if g == "float32":
+            stored += 2 * st.resident_bytes(1, w)
+            if st.name != "f32" and not fused:
+                transient += 16 * w
+        else:
+            stored += 2 * jnp.dtype(g).itemsize * w
+    per_step = n_mom * (stored + transient)
+    return {"stored_bytes_per_step": n_mom * stored,
+            "transient_bytes_per_step": n_mom * transient,
+            "bytes_per_step": per_step,
+            "bytes_per_round": per_step * local_steps}
 
 
 def round_wire_bytes(W, *, bytes_wire: int, bytes_full: int,

@@ -29,7 +29,8 @@ from repro.optim import make_optimizer
 from repro.telemetry import metrics as tmetrics
 from repro.telemetry.events import (EventLog, make_run_id, read_events,
                                     validate_stream, wall_path)
-from repro.telemetry.latency import Histogram, histogram_set
+from repro.telemetry.latency import (Histogram, default_bounds,
+                                     histogram_set)
 
 pytestmark = pytest.mark.telemetry
 
@@ -370,8 +371,17 @@ def test_histogram_reset_and_merge():
     b.record(1e-2, n=3)
     a.merge(b)
     assert a.n == 5 and a.vmax == 1e-2
-    with pytest.raises(ValueError, match="bucket ladders"):
+    # ladder mismatches refuse loudly, naming the divergence: a length
+    # mismatch reports both sizes, an equal-length value mismatch names
+    # the first differing index and both bounds (merging across ladders
+    # would silently mis-bin every sample)
+    with pytest.raises(ValueError, match=r"65 bounds vs 2"):
         a.merge(Histogram(bounds=np.array([1.0, 2.0])))
+    skewed = default_bounds()
+    skewed[3] *= 1.1  # still increasing (ladder step is ~1.33x)
+    with pytest.raises(ValueError, match=r"index 3 \(") as ei:
+        a.merge(Histogram(bounds=skewed))
+    assert "vs" in str(ei.value)
     with pytest.raises(ValueError, match="increasing"):
         Histogram(bounds=np.array([2.0, 1.0]))
     assert set(histogram_set(("x", "y"))) == {"x", "y"}
